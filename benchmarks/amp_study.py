@@ -1,0 +1,83 @@
+"""Paper §IV-C, Figs 8-9: the AMP O0/O1/O2 precision-policy study.
+
+For DeepCAM (the paper's case) and one LM (beyond-paper), profile the
+backward pass under each policy and report: bf16 vs f32 FLOP split (how
+much compute moved onto the MXU ceiling), the roofline terms, and the
+expected orderings (O1/O2 shift FLOPs to bf16 and shrink bytes vs O0 —
+the paper's Fig 9 → Fig 6 move).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.core import get_machine, profile_fn
+from repro.models import build, input_specs
+from repro.models.deepcam import deepcam_loss, deepcam_spec
+from repro.models.params import abstract
+
+
+def _deepcam_bwd(run: RunConfig):
+    spec = deepcam_spec(8)
+    params = abstract(spec)
+    images = jax.ShapeDtypeStruct((2, 64, 96, 16), jnp.float32)
+    labels = jax.ShapeDtypeStruct((2, 64, 96), jnp.int32)
+
+    def bwd(p, im, lb):
+        return jax.grad(lambda q: deepcam_loss(q, im, lb, run))(p)
+
+    return bwd, (params, images, labels)
+
+
+def _lm_bwd(run: RunConfig):
+    cfg = get_smoke("granite-8b")
+    model = build(cfg)
+    params = abstract(model.spec, run.param_dtype)
+    shape = ShapeSpec("t", 64, 4, "train")
+    batch = {k: jax.ShapeDtypeStruct((4, *v.shape[1:]), v.dtype)
+             for k, v in input_specs(cfg, shape).items()}
+
+    def bwd(p, b):
+        return jax.grad(lambda q: model.loss_fn(q, b, run)[0])(p)
+
+    return bwd, (params, batch)
+
+
+def main() -> list[Row]:
+    machine = get_machine("tpu-v5e")
+    rows: list[Row] = []
+    stats = {}
+    for model_name, builder in (("deepcam", _deepcam_bwd), ("lm", _lm_bwd)):
+        for amp in ("O0", "O1", "O2"):
+            run = RunConfig(amp=amp)
+            fn, args = builder(run)
+            res = profile_fn(fn, args=args, name=f"{model_name}/{amp}",
+                             machine=machine)
+            by_cls = res.analysis.total_flops_by_class
+            total = sum(by_cls.values()) or 1.0
+            bf16_share = by_cls.get("bf16", 0.0) / total
+            stats[(model_name, amp)] = (bf16_share,
+                                        res.analysis.total_hbm_bytes,
+                                        res.terms.bound_overlap_s)
+            rows.append((f"amp_study/{model_name}_{amp}", 0.0,
+                         f"bf16_share={bf16_share:.2f};"
+                         f"bytes={res.analysis.total_hbm_bytes/1e6:.0f}MB;"
+                         f"bound={res.terms.bound_overlap_s*1e3:.2f}ms"))
+    for model_name in ("deepcam", "lm"):
+        o0, o1 = stats[(model_name, "O0")], stats[(model_name, "O1")]
+        # paper Fig 9→6: AMP moves compute onto the half-precision ceiling
+        rows.append((f"amp_study/{model_name}_O1_moves_flops_to_bf16", 0.0,
+                     str(o1[0] > o0[0] + 0.3)))
+        # and the roofline time bound drops
+        rows.append((f"amp_study/{model_name}_O1_bound_leq_O0", 0.0,
+                     str(o1[2] <= o0[2] * 1.05)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

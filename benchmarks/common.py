@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing: CSV rows of (name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+Row = tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median-ish wall time per call, in microseconds."""
+    jitted = jax.jit(fn) if not hasattr(fn, "lower") else fn
+    out = None
+    for _ in range(warmup):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: list[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,90 @@
+"""Paper Figs 3-7: hierarchical roofline of DeepCAM, per phase and impl.
+
+The paper's charts: per-kernel (AI, GFLOP/s) triplets for forward /
+backward / optimizer of the TensorFlow vs PyTorch DeepCAM.  Here: the
+``reference`` vs ``fused`` JAX lowerings of the same DeepLabv3+-style
+network, profiled via the compiled-HLO analyzer at a reduced (CPU-sized)
+resolution, with the ASCII hierarchical-roofline chart, per-kernel table
+and the three-term summary per phase.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs.base import RunConfig
+from repro.core import (ascii_roofline, get_machine, kernel_table,
+                        profile_fn, terms_table)
+from repro.models.deepcam import deepcam_loss, deepcam_spec
+from repro.models.params import abstract
+from repro.train.optim import adamw_init, adamw_update
+
+WIDTH, HW, BATCH = 8, (64, 96), 2
+
+
+def _phases(impl: str, run: RunConfig):
+    spec = deepcam_spec(WIDTH)
+    params = abstract(spec)
+    images = jax.ShapeDtypeStruct((BATCH, *HW, 16), jnp.float32)
+    labels = jax.ShapeDtypeStruct((BATCH, *HW), jnp.int32)
+
+    def fwd(p, im, lb):
+        return deepcam_loss(p, im, lb, run, impl=impl)
+
+    def bwd(p, im, lb):
+        return jax.grad(fwd)(p, im, lb)
+
+    def opt(p, g, st):
+        return adamw_update(g, st, p)
+
+    opt_state = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), run))
+    return {
+        "fwd": (fwd, (params, images, labels)),
+        "bwd": (bwd, (params, images, labels)),
+        "opt": (opt, (params, params, opt_state)),
+    }
+
+
+def main(verbose: bool = False) -> list[Row]:
+    machine = get_machine("tpu-v5e")
+    run = RunConfig(amp="O1")
+    rows: list[Row] = []
+    results = {}
+    for impl in ("reference", "fused"):
+        for phase, (fn, args) in _phases(impl, run).items():
+            res = profile_fn(fn, args=args, name=f"{impl}/{phase}",
+                             machine=machine)
+            results[f"{impl}/{phase}"] = res
+            t = res.terms
+            rows.append((f"deepcam_roofline/{impl}_{phase}", 0.0,
+                         f"dom={t.dominant};frac={t.roofline_fraction:.3f};"
+                         f"kernels={len(res.analysis.kernels)}"))
+            if verbose:
+                print(ascii_roofline(res.analysis.kernels, machine,
+                                     title=f"DeepCAM {impl} {phase}"))
+                print(kernel_table(res.analysis, machine, top_n=8))
+
+    # paper's headline observations, as derived checks:
+    # (1) backward has more FLOPs than forward
+    rows.append(("deepcam_roofline/bwd_gt_fwd_flops", 0.0, str(
+        results["reference/bwd"].analysis.total_flops
+        > results["reference/fwd"].analysis.total_flops)))
+    # (2) the optimizer phase is memory-bound streaming (Fig 7)
+    rows.append(("deepcam_roofline/opt_memory_bound", 0.0,
+                 results["reference/opt"].terms.dominant))
+    # (3) conv kernels dominate compute
+    mm = sum(k.total_flops for k in results["reference/fwd"].analysis.kernels
+             if k.category in ("conv", "matmul"))
+    rows.append(("deepcam_roofline/conv_flop_share", 0.0,
+                 f"{mm / results['reference/fwd'].analysis.total_flops:.2f}"))
+    if verbose:
+        print(terms_table(results))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main(verbose=True))

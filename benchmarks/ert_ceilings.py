@@ -1,0 +1,52 @@
+"""Paper Fig 1: multi-precision machine ceilings.
+
+Two panels:
+* the *datasheet* TPU v5e ceilings the roofline tables use (bf16/f32/int8 +
+  HBM/VMEM/ICI), printed as the machine model;
+* the *empirical* ceilings of THIS host, measured by the ERT jnp oracles
+  (the paper's point: measured < marketing), producing an empirical
+  MachineSpec and an ASCII roofline chart of the measured ceilings.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.core.machine import TPU_V5E
+from repro.kernels.ert import ops as ert
+
+
+def main() -> list[Row]:
+    rows: list[Row] = []
+    # datasheet panel
+    for cls, peak in TPU_V5E.peak_flops.items():
+        rows.append((f"ert_ceilings/datasheet_{cls}", 0.0,
+                     f"{peak/1e12:.1f}TFLOPs"))
+    for lv in TPU_V5E.mem_levels:
+        rows.append((f"ert_ceilings/datasheet_{lv.name}_bw", 0.0,
+                     f"{lv.bytes_per_s/1e9:.0f}GB/s"))
+    rows.append(("ert_ceilings/datasheet_ici_bw", 0.0,
+                 f"{TPU_V5E.ici_bytes_per_s*TPU_V5E.ici_links/1e9:.0f}GB/s"))
+
+    # empirical panel (this host, XLA-compiled oracles)
+    f32 = ert.measure_flops(jnp.float32, n=1 << 18, n_iters=64, ilp=8)
+    bf16 = ert.measure_flops(jnp.bfloat16, n=1 << 18, n_iters=64, ilp=8)
+    mxu = ert.measure_gemm(jnp.bfloat16, 512)
+    hbm = ert.measure_bandwidth(jnp.float32, n=1 << 22)
+    llc = ert.measure_bandwidth(jnp.float32, n=1 << 14)
+    rows += [
+        ("ert_ceilings/empirical_f32_chain", 0.0, f"{f32/1e9:.1f}GFLOPs"),
+        ("ert_ceilings/empirical_bf16_chain", 0.0, f"{bf16/1e9:.1f}GFLOPs"),
+        ("ert_ceilings/empirical_gemm512", 0.0, f"{mxu/1e9:.1f}GFLOPs"),
+        ("ert_ceilings/empirical_dram_bw", 0.0, f"{hbm/1e9:.1f}GB/s"),
+        ("ert_ceilings/empirical_cache_bw", 0.0, f"{llc/1e9:.1f}GB/s"),
+    ]
+    spec = TPU_V5E.with_empirical()     # structure check
+    assert spec.empirical
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

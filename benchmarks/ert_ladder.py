@@ -1,0 +1,28 @@
+"""Paper Table I: the precision/tuning ladder, measured on this host.
+
+V100 ladder (naive→half2→u32 idx→inline→29.2 TF) maps to the TPU-native
+rungs: fp32 chain (ilp=1) → fp32 (ilp=8, latency hiding) → bf16 packed →
+MXU GEMM small → MXU GEMM large (hardware-aligned tiles).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.kernels.ert import ops as ert
+
+
+def main() -> list[Row]:
+    rungs = ert.ladder(backend="xla", n=1 << 18)
+    rows = [(f"ert_ladder/{name.replace(' ', '_')}", 0.0,
+             f"{perf/1e9:.1f}GFLOPs")
+            for name, perf in rungs.items()]
+    # the ladder should broadly ascend (tolerate host noise on neighbors)
+    perfs = list(rungs.values())
+    rows.append(("ert_ladder/ascends", 0.0,
+                 str(perfs[-1] > perfs[0])))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

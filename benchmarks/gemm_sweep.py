@@ -1,0 +1,48 @@
+"""Paper Fig 2 + Eq 3: GEMM performance vs matrix size.
+
+The paper sweeps M=N=K for WMMA vs cuBLAS against the 107.5 TF theoretical
+Tensor-Core peak (Eq 3).  Here: the XLA-native einsum GEMM (the cuBLAS
+analogue) measured on this host across sizes, plus the v5e MXU theoretical
+peak derived Eq-3-style from its systolic-array geometry, and the Pallas
+kernel's interpret-mode correctness check at one size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels.ert import gemm, ops as ert, ref
+
+
+def main() -> list[Row]:
+    rows: list[Row] = []
+    # Eq-3 analogue for v5e: 4 MXUs × 128×128 PEs × 2 flop × ~0.94 GHz
+    eq3 = 4 * 128 * 128 * 2 * 0.94e9
+    rows.append(("gemm_sweep/eq3_v5e_peak", 0.0, f"{eq3/1e12:.1f}TFLOPs"))
+
+    sweep = ert.gemm_size_sweep(sizes=(128, 256, 512, 1024), backend="xla")
+    for size, perf in sweep.items():
+        rows.append((f"gemm_sweep/xla_{size}", 0.0,
+                     f"{perf/1e9:.1f}GFLOPs"))
+    # monotone-ish rise with size (the paper's headline shape)
+    perfs = list(sweep.values())
+    rows.append(("gemm_sweep/rises_with_size", 0.0,
+                 str(perfs[-1] > perfs[0])))
+
+    # Pallas kernel correctness at one size (the WMMA analogue: our own
+    # blocked kernel vs the library path)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (256, 256), jnp.float32)
+    b = jax.random.normal(key, (256, 256), jnp.float32)
+    out = gemm.matmul(a, b, block_m=128, block_n=128, block_k=128)
+    err = float(jnp.max(jnp.abs(out - ref.matmul_ref(a, b))))
+    rows.append(("gemm_sweep/pallas_vs_ref_maxerr", 0.0, f"{err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

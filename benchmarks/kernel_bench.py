@@ -1,0 +1,78 @@
+"""Kernel-level benchmark: analytic roofline terms of the Pallas kernels vs
+their XLA-native equivalents (the §Perf flash-attention / SSD story).
+
+The kernels' HBM traffic is analytic (derived from their BlockSpecs — the
+whole point of flash/SSD fusion is scores never touch HBM); the XLA-native
+traffic comes from the compiled-HLO analyzer.  The ratio is the memory-term
+win a real TPU realizes when the kernel replaces the XLA lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.core import analyze_compiled, get_machine
+from repro.kernels.flash_attention import kernel as FA
+from repro.kernels.ssd_scan import kernel as SSD
+from repro.models.layers import _sdpa_chunked
+
+
+def main() -> list[Row]:
+    machine = get_machine("tpu-v5e")
+    rows: list[Row] = []
+
+    # --- flash attention vs chunked-XLA, structural terms ------------------
+    B, H, S, hd = 1, 8, 4096, 128
+    q = jax.ShapeDtypeStruct((B, S, H, 1, hd), jnp.bfloat16)
+    k = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+    v = jax.ShapeDtypeStruct((B, S, H, hd), jnp.bfloat16)
+    pos = jnp.arange(S)
+    comp = jax.jit(lambda a, b, c: _sdpa_chunked(
+        a, b, c, pos, pos, True, 512)).lower(q, k, v).compile()
+    an = analyze_compiled(comp)
+    xla_bytes = an.total_hbm_bytes
+    kernel_bytes = FA.hbm_bytes(B * H, S, S, hd)
+    rows.append(("kernel_bench/attn_xla_hbm_bytes", 0.0,
+                 f"{xla_bytes/1e9:.2f}GB"))
+    rows.append(("kernel_bench/attn_flash_hbm_bytes", 0.0,
+                 f"{kernel_bytes/1e9:.4f}GB"))
+    rows.append(("kernel_bench/attn_traffic_ratio", 0.0,
+                 f"{xla_bytes/kernel_bytes:.0f}x"))
+    rows.append(("kernel_bench/attn_mem_term_xla_ms", 0.0,
+                 f"{xla_bytes/machine.hbm.bytes_per_s*1e3:.2f}"))
+    rows.append(("kernel_bench/attn_mem_term_flash_ms", 0.0,
+                 f"{kernel_bytes/machine.hbm.bytes_per_s*1e3:.4f}"))
+
+    # --- ssd kernel vs XLA-native chunked scan ------------------------------
+    from repro.models.ssm import ssd_chunked
+    Bs, Ss, Hs, P, N, Q = 1, 2048, 16, 64, 128, 128
+    xh = jax.ShapeDtypeStruct((Bs, Ss, Hs, P), jnp.float32)
+    a = jax.ShapeDtypeStruct((Bs, Ss, Hs), jnp.float32)
+    Bc = jax.ShapeDtypeStruct((Bs, Ss, N), jnp.float32)
+    Cc = jax.ShapeDtypeStruct((Bs, Ss, N), jnp.float32)
+    comp = jax.jit(lambda w, x, y, z: ssd_chunked(
+        w, x, y, z, Q)[0]).lower(xh, a, Bc, Cc).compile()
+    an = analyze_compiled(comp)
+    xla_bytes = an.total_hbm_bytes
+    kernel_bytes = SSD.hbm_bytes(Bs, Hs, Ss, P, N)
+    rows.append(("kernel_bench/ssd_xla_hbm_bytes", 0.0,
+                 f"{xla_bytes/1e9:.2f}GB"))
+    rows.append(("kernel_bench/ssd_kernel_hbm_bytes", 0.0,
+                 f"{kernel_bytes/1e9:.4f}GB"))
+    rows.append(("kernel_bench/ssd_traffic_ratio", 0.0,
+                 f"{xla_bytes/kernel_bytes:.0f}x"))
+
+    # --- interpret-mode wall time (correctness-path health, not perf) ------
+    key = jax.random.PRNGKey(0)
+    qs = jax.random.normal(key, (2, 256, 64), jnp.float32)
+    us = timed(lambda x: FA.flash_attention(x, x, x, block_q=128,
+                                            block_k=128), qs, iters=2)
+    rows.append(("kernel_bench/flash_interpret_256_us", us, "interpret"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md tables from the result JSONL files.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.report_experiments [--write]``
+Prints (or splices into EXPERIMENTS.md between markers) the §Dry-run,
+§Roofline and §Perf tables from benchmarks/results/*.jsonl.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+BASELINE = os.path.join(HERE, "results", "dryrun_baseline.jsonl")
+PERF = os.path.join(HERE, "results", "perf_iterations.jsonl")
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def _ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def dryrun_table() -> str:
+    recs = [r for r in _load(BASELINE) if not r.get("error")]
+    out = ["| arch | shape | mesh | HLO GF/dev | HBM GB/dev | ICI GB | "
+           "peak GiB/dev | fits | compile s |",
+           "|---|---|---|---:|---:|---:|---:|---|---:|"]
+    for r in recs:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['hlo_flops_per_dev']/1e9:.0f} "
+            f"| {r['hbm_bytes_per_dev']/1e9:.1f} "
+            f"| {r['ici_wire_bytes']/1e9:.1f} "
+            f"| {r['peak_device_bytes']/2**30:.2f} "
+            f"| {'✓' if r['fits_hbm'] else '✗'} "
+            f"| {r['compile_s']:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    recs = [r for r in _load(BASELINE) if not r.get("error")]
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | frac | adj-mem s | adj-frac | MFR |",
+           "|---|---|---|---:|---:|---:|---|---:|---:|---:|---:|"]
+    for r in recs:
+        coll = r["collective_ici_s"] + r["collective_dcn_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {coll:.3f} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+            f"| {r.get('adj_memory_s', float('nan')):.3f} "
+            f"| {r.get('adj_roofline_fraction', float('nan')):.3f} "
+            f"| {r['model_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def perf_table() -> str:
+    recs = [r for r in _load(PERF) if not r.get("error")]
+    out = ["| cell | variant | compute s | memory s | coll s | frac | "
+           "adj-frac | peak GiB | fits | hypothesis |",
+           "|---|---|---:|---:|---:|---:|---:|---:|---|---|"]
+    for r in recs:
+        coll = r["collective_ici_s"] + r["collective_dcn_s"]
+        out.append(
+            f"| {r['cell']} | {r['variant']} | {r['compute_s']:.2f} "
+            f"| {r['memory_s']:.2f} | {coll:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r.get('adj_roofline_fraction', float('nan')):.3f} "
+            f"| {r['peak_device_bytes']/2**30:.1f} "
+            f"| {'✓' if r['fits_hbm'] else '✗'} "
+            f"| {r['hypothesis'][:90]} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="splice tables into EXPERIMENTS.md markers")
+    args = ap.parse_args(argv)
+    sections = {
+        "DRYRUN_TABLE": dryrun_table(),
+        "ROOFLINE_TABLE": roofline_table(),
+        "PERF_TABLE": perf_table(),
+    }
+    if not args.write:
+        for k, v in sections.items():
+            print(f"<!-- {k} -->\n{v}\n")
+        return 0
+    path = os.path.join(HERE, "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    for key, table in sections.items():
+        begin, end = f"<!-- BEGIN {key} -->", f"<!-- END {key} -->"
+        if begin in text and end in text:
+            pre, rest = text.split(begin, 1)
+            _, post = rest.split(end, 1)
+            text = pre + begin + "\n" + table + "\n" + end + post
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

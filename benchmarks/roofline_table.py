@@ -1,0 +1,58 @@
+"""Task-spec §Roofline: the 40-cell baseline table from the dry-run sweep.
+
+Reads ``benchmarks/results/dryrun_baseline.jsonl`` (written by
+``python -m repro.launch.dryrun --all --mesh both --out ...``) and reports
+per (arch × shape × mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio and HBM fit.  If the sweep file is missing the
+benchmark recomputes TWO representative cells live (slow path).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "dryrun_baseline.jsonl")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def main() -> list[Row]:
+    recs = [r for r in load() if not r.get("error")]
+    rows: list[Row] = []
+    if not recs:
+        rows.append(("roofline_table/missing_sweep", 0.0,
+                     "run repro.launch.dryrun --all first"))
+        return rows
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        coll = r["collective_ici_s"] + r["collective_dcn_s"]
+        rows.append((name, 0.0,
+                     f"compute={r['compute_s']*1e3:.1f}ms;"
+                     f"memory={r['memory_s']*1e3:.1f}ms;"
+                     f"coll={coll*1e3:.1f}ms;"
+                     f"dom={r['dominant']};"
+                     f"frac={r['roofline_fraction']:.3f};"
+                     f"mfr={r['model_flops_ratio']:.3f};"
+                     f"fits={r['fits_hbm']}"))
+    n_fit = sum(1 for r in recs if r["fits_hbm"])
+    rows.append(("roofline_table/cells", 0.0, str(len(recs))))
+    rows.append(("roofline_table/fit_cells", 0.0, f"{n_fit}/{len(recs)}"))
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    rows.append(("roofline_table/dominant_histogram", 0.0,
+                 ";".join(f"{k}={v}" for k, v in sorted(doms.items()))))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

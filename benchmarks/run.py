@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure (+ ops benches).
+
+``PYTHONPATH=src python -m benchmarks.run [--only <name>]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+SUITES = (
+    "ert_ceilings",      # paper Fig 1
+    "ert_ladder",        # paper Table I
+    "gemm_sweep",        # paper Fig 2 / Eq 3
+    "deepcam_roofline",  # paper Figs 3-7
+    "amp_study",         # paper Figs 8-9, SIV-C
+    "zero_ai_census",    # paper Table III
+    "roofline_table",    # task-spec SRoofline (40-cell dry-run table)
+    "kernel_bench",      # SPerf kernel-vs-XLA structural terms
+    "train_throughput",  # operational: measured smoke train steps
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SUITES)
+    args = ap.parse_args(argv)
+    failures = 0
+    for name in SUITES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        try:
+            rows = mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR")
+            traceback.print_exc()
+            continue
+        emit(rows)
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Measured end-to-end train-step wall time on this host (smoke configs).
+
+Not a paper table — the operational benchmark that keeps the substrate
+honest: per-arch smoke train step must run, converge-ish, and report
+tokens/s on the CPU host, plus the serve engine's tok/s.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.models import build, synthetic_batch
+from repro.train.step import init_state, make_train_step
+
+ARCHS = ("minitron-4b", "glm4-9b", "mamba2-1.3b", "zamba2-1.2b",
+         "granite-moe-1b-a400m", "seamless-m4t-large-v2")
+
+
+def main() -> list[Row]:
+    rows: list[Row] = []
+    shape = ShapeSpec("t", 64, 4, "train")
+    run = RunConfig(amp="O1")
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        model = build(cfg)
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, run))
+        batch = synthetic_batch(cfg, shape, 4)
+        us = timed(step, state, batch, iters=3, warmup=1)
+        toks = 4 * shape.seq_len
+        rows.append((f"train_throughput/{arch}", us,
+                     f"{toks/(us/1e6):.0f}tok/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

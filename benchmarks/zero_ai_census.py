@@ -1,0 +1,81 @@
+"""Paper Table III: zero-AI kernel invocations per phase and implementation.
+
+The paper counts kernel launches that perform zero FLOPs (type converts,
+layout moves, host transfers): 40-55% of all launches in both frameworks,
+with TF using ~2× more than PyTorch.  Here: the same census over the
+compiled HLO of DeepCAM (reference vs fused lowering — the TF-vs-PyTorch
+analogue) and of an LM train step, per phase.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.core import profile_fn, zero_ai_table
+from repro.models import build, input_specs
+from repro.models.deepcam import deepcam_loss, deepcam_spec
+from repro.models.params import abstract
+
+
+def main(verbose: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    run = RunConfig(amp="O1")
+
+    census_by = {}
+    for impl in ("reference", "fused"):
+        spec = deepcam_spec(8)
+        params = abstract(spec)
+        images = jax.ShapeDtypeStruct((2, 64, 96, 16), jnp.float32)
+        labels = jax.ShapeDtypeStruct((2, 64, 96), jnp.int32)
+
+        def fwd(p, im, lb, impl=impl):
+            return deepcam_loss(p, im, lb, run, impl=impl)
+
+        def bwd(p, im, lb, impl=impl):
+            return jax.grad(lambda q: deepcam_loss(q, im, lb, run,
+                                                   impl=impl))(p)
+
+        for phase, fn in (("fwd", fwd), ("bwd", bwd)):
+            res = profile_fn(fn, args=(params, images, labels),
+                             name=f"{impl}/{phase}")
+            census = res.analysis.zero_ai_census()
+            census_by[f"{impl}/{phase}"] = census
+            z, n = census["zero-AI"][0], census["non zero-AI"][0]
+            rows.append((f"zero_ai/{impl}_{phase}", 0.0,
+                         f"zero={z};nonzero={n};frac={z/(z+n):.2f}"))
+
+    # the paper's comparison: the two lowerings' zero-AI counts
+    zr = sum(census_by[f"reference/{p}"]["zero-AI"][0]
+             for p in ("fwd", "bwd"))
+    zf = sum(census_by[f"fused/{p}"]["zero-AI"][0] for p in ("fwd", "bwd"))
+    rows.append(("zero_ai/reference_vs_fused", 0.0, f"{zr}vs{zf}"))
+
+    # LM train-step census (beyond-paper: the same diagnostic on an LM)
+    cfg = get_smoke("glm4-9b")
+    model = build(cfg)
+    shape = ShapeSpec("t", 64, 4, "train")
+    batch = {k: jax.ShapeDtypeStruct((4, *v.shape[1:]), v.dtype)
+             for k, v in input_specs(cfg, shape).items()}
+    params = abstract(model.spec)
+
+    def lm_bwd(p, b):
+        return jax.grad(lambda q: model.loss_fn(q, b, run)[0])(p)
+
+    res = profile_fn(lm_bwd, args=(params, batch), name="lm/bwd")
+    census = res.analysis.zero_ai_census()
+    census_by["lm/bwd"] = census
+    z, n = census["zero-AI"][0], census["non zero-AI"][0]
+    rows.append(("zero_ai/lm_bwd", 0.0,
+                 f"zero={z};nonzero={n};frac={z/(z+n):.2f}"))
+    if verbose:
+        print(zero_ai_table(census_by))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main(verbose=True))

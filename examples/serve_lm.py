@@ -1,0 +1,55 @@
+"""Serving example: continuous-batching engine + the decode roofline.
+
+Serves a batch of prompts through the slot-based engine (more requests
+than slots → slot reuse), then lowers the production ``serve_step`` for
+the same architecture and prints its roofline terms — the decode cell of
+the dry-run grid, on your own model.
+
+Run: ``PYTHONPATH=src python examples/serve_lm.py``
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.core import get_machine, profile_fn
+from repro.models import build, decode_state_specs, input_specs
+from repro.models.params import abstract, init
+from repro.serve.engine import Engine, Request
+
+cfg = get_smoke("glm4-9b")
+run = RunConfig(amp="O1")
+model = build(cfg)
+params = init(jax.random.PRNGKey(0), model.spec)
+
+# --- serve a request stream (continuous batching) ---------------------------
+engine = Engine(cfg, run, params, n_slots=2, max_len=64)
+rng = np.random.default_rng(0)
+requests = [
+    Request(i, rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 9))).astype(np.int32),
+            max_new=6)
+    for i in range(5)
+]
+engine.serve(requests)
+for r in requests:
+    print(f"request {r.uid}: prompt[{len(r.prompt)}] → {r.out}")
+assert all(r.done for r in requests)
+
+# --- the decode-cell roofline for this architecture --------------------------
+shape = ShapeSpec("serve", seq_len=64, global_batch=4, kind="decode")
+state = decode_state_specs(cfg, shape, batch=4)
+
+
+def serve_step(p, batch, st):
+    return model.decode_fn(p, batch, st, run)
+
+
+res = profile_fn(serve_step,
+                 args=(abstract(model.spec), input_specs(cfg, shape), state),
+                 name="glm4-9b/serve_step", machine=get_machine("tpu-v5e"))
+print("\nserve_step roofline:", res.summary())
+print("decode is", res.terms.dominant,
+      "-bound (one token amortizes the whole cache read — paper's "
+      "low-AI streaming regime)")

@@ -1,0 +1,209 @@
+"""Model / run configuration system.
+
+Every assigned architecture is a :class:`ModelConfig` (exact public numbers)
+plus a reduced ``smoke`` variant of the same family for CPU tests.  Run-time
+behaviour (precision policy, remat, parallelism) lives in :class:`RunConfig`
+so the same model can be lowered under different distribution strategies —
+that separation is what the §Perf hillclimbs iterate on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio",
+                 "cnn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    act: str = "swiglu"              # swiglu | geglu | gelu | relu2
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_shared_ff: int = 0           # shared-expert ffn width (kimi-style)
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128             # SSD chunk length
+    # --- hybrid (zamba2): one *shared* attn+mlp block every k ssm layers ---
+    hybrid_group: int = 0            # 0 = not hybrid
+    # --- enc-dec ---
+    n_encoder_layers: int = 0
+    # --- multimodal stubs ---
+    n_prefix_embeds: int = 0         # VLM patch / audio frame embeddings
+    # --- provenance ---
+    source: str = ""
+
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_heads and not self.n_kv_heads:
+            object.__setattr__(self, "n_kv_heads", self.n_heads)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table vocab padded to a TP-friendly multiple of 128
+        (Megatron-style): keeps the vocab axis shardable on any mesh whose
+        model axis divides 128.  Padded logit columns are masked in the loss.
+        """
+        return (self.vocab_size + 127) // 128 * 128
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing → long_500k cell applies."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND MODEL_FLOPS and memory tables)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        total = V * D  # embedding
+        if not self.tie_embeddings:
+            total += V * D
+
+        def attn_params() -> int:
+            q = D * self.n_heads * self.head_dim
+            kv = 2 * D * self.n_kv_heads * self.head_dim
+            o = self.n_heads * self.head_dim * D
+            return q + kv + o
+
+        def mlp_params(ff: int) -> int:
+            mult = 3 if self.act in ("swiglu", "geglu") else 2
+            return mult * D * ff
+
+        def ssm_params() -> int:
+            di, G, N = self.d_inner, self.ssm_n_groups, self.ssm_state
+            H = self.ssm_heads
+            in_p = D * (2 * di + 2 * G * N + H)
+            conv = self.ssm_conv_width * (di + 2 * G * N)
+            out_p = di * D
+            return in_p + conv + out_p + 2 * H + di  # A_log, D, norm
+
+        if self.family in ("dense", "vlm"):
+            total += L * (attn_params() + mlp_params(F) + 2 * D)
+        elif self.family == "moe":
+            per_expert = mlp_params(F)
+            total += L * (attn_params() + self.n_experts * per_expert
+                          + D * self.n_experts            # router
+                          + mlp_params(self.moe_shared_ff)
+                          + 2 * D)
+        elif self.family == "ssm":
+            total += L * (ssm_params() + D)
+        elif self.family == "hybrid":
+            n_groups = max(1, L // self.hybrid_group) if self.hybrid_group else 1
+            total += L * (ssm_params() + D)
+            total += attn_params() + mlp_params(F) + 2 * D  # one SHARED block
+            del n_groups
+        elif self.family in ("encdec", "audio"):
+            enc = self.n_encoder_layers * (attn_params() + mlp_params(F) + 2 * D)
+            dec = L * (2 * attn_params() + mlp_params(F) + 3 * D)
+            total += enc + dec
+        total += D  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top-k experts only) for 6·N_active·D."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        mult = 3 if self.act in ("swiglu", "geglu") else 2
+        dense_like = self.param_count() - L * self.n_experts * mult * D * F
+        return dense_like + L * self.experts_per_token * mult * D * F
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution policy — the knobs the §Perf hillclimbs turn."""
+
+    # precision (paper §IV-C AMP study): O0=fp32, O1=bf16 compute/fp32 params,
+    # O2=bf16 everywhere (incl. optimizer 2nd moment)
+    amp: str = "O1"
+    # remat: "none" | "dots" | "full"
+    remat: str = "none"
+    # parallelism
+    tp: bool = True                  # Megatron TP over "model"
+    fsdp: bool = False               # ZeRO-3 param shard over "data"
+    sp: bool = False                 # sequence-sharded activations
+    ep: bool = True                  # experts over "model"
+    # attention lowering: "einsum" | "chunked" | "flash" (Pallas)
+    attn_impl: str = "einsum"
+    attn_chunk: int = 1024
+    # SSD lowering: "xla" (chunked dual form in jnp) | "kernel" (Pallas)
+    ssd_impl: str = "xla"
+    # attention softmax statistics in fp32 (paper §IV-C O1 semantics);
+    # False = bf16 stats (the O2-style aggressive extension — halves the
+    # live score tensors; take care with very long contexts)
+    softmax_f32: bool = True
+    # logits: compute vocab-sharded cross-entropy without full gather
+    sharded_logits: bool = True
+    # gradient accumulation microbatches
+    microbatches: int = 1
+    # cross-pod gradient compression (int8 + error feedback)
+    grad_compression: bool = False
+    # optimizer: "adamw" | "adafactor"
+    optimizer: str = "adamw"
+    # deepcam lowering variant (paper's TF-vs-PyTorch comparison)
+    impl: str = "reference"
+    # MoE combine lowering: "default" (XLA masked-gather → model-axis
+    # all-reduce), "reshard" (explicitly bring the expert buffer back to
+    # batch sharding in bf16, gather locally), "a2a" (shard the sorted-token
+    # dim over model so dispatch/combine move only expert-local slices)
+    moe_combine: str = "default"
+
+    @property
+    def param_dtype(self):
+        import jax.numpy as jnp
+        return jnp.float32 if self.amp in ("O0", "O1") else jnp.bfloat16
+
+    @property
+    def compute_dtype(self):
+        import jax.numpy as jnp
+        return jnp.float32 if self.amp == "O0" else jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell (assigned per task spec)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

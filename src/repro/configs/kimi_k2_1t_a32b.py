@@ -1,0 +1,29 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8
+[arXiv:2501.kimi2; unverified].
+
+Per the paper-table numbers: 61 layers, d_model 7168, 64 query heads
+(GQA kv=8), per-expert FFN width 2048, 384 routed experts top-8 + one
+shared expert (moe_shared_ff=2048).  head_dim = 7168/64 = 112 (derived).
+
+1T params cannot fit AdamW-fp32 training state on 256/512 v5e chips; the
+training RunConfig defaults to Adafactor for this arch (see EXPERIMENTS.md
+§Dry-run memory notes) — the dry-run still compiles and reports honest
+memory_analysis either way.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+    d_ff=2048, vocab_size=163_840, act="swiglu", tie_embeddings=False,
+    n_experts=384, experts_per_token=8, moe_shared_ff=2048,
+    source="arXiv:2501.kimi2 (unverified paper-table)",
+)
+
+SMOKE = ModelConfig(
+    name="kimi-k2-1t-a32b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab_size=512, act="swiglu", tie_embeddings=False,
+    n_experts=8, experts_per_token=2, moe_shared_ff=32,
+)

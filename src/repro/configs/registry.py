@@ -1,0 +1,58 @@
+"""Config registry: ``--arch <id>`` → (full config, smoke config).
+
+Cell applicability (task spec): ``long_500k`` only for sub-quadratic
+families; encoder-only archs would skip decode (none assigned); deepcam is
+the paper's own benchmark and uses image shapes, not the LM shape grid.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+
+_MODULES = {
+    "minitron-4b": "minitron_4b",
+    "mistral-large-123b": "mistral_large_123b",
+    "granite-8b": "granite_8b",
+    "glm4-9b": "glm4_9b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepcam": "deepcam",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "deepcam")   # the 10 assigned
+ALL = tuple(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def cells(arch: str) -> list[ShapeSpec]:
+    """The applicable (arch x shape) cells for the 40-cell grid."""
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.supports_long_context:
+            continue   # quadratic-attention archs skip 500k decode (DESIGN §5)
+        out.append(s)
+    return out
+
+
+def all_cells() -> list[tuple[str, ShapeSpec]]:
+    return [(a, s) for a in ARCHS for s in cells(a)]

@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal [arXiv:2308.11596].
+
+Transformer backbone only (per task spec): 24-layer encoder over precomputed
+speech-frame embeddings (the w2v-BERT frontend is a stub) + 24-layer decoder
+with cross-attention.  Frame rate assumption (documented): encoder length =
+seq_len // 8 (conformer 8x downsampling of 16 kHz fbank frames).
+"""
+
+from repro.configs.base import ModelConfig
+
+FRAME_DOWNSAMPLE = 8
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, n_encoder_layers=24,
+    d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=8192, vocab_size=256_206, act="gelu", tie_embeddings=False,
+    source="arXiv:2308.11596; hf:facebook/seamless-m4t-v2-large",
+)
+
+SMOKE = ModelConfig(
+    name="seamless-m4t-large-v2-smoke", family="audio",
+    n_layers=2, n_encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, act="gelu", tie_embeddings=False,
+)

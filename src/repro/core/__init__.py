@@ -1,0 +1,30 @@
+"""Hierarchical roofline performance analysis (the paper's contribution).
+
+Public API::
+
+    from repro.core import (
+        get_machine, MachineSpec,            # machine characterization (ERT)
+        analyze_compiled, ModuleAnalysis,    # application characterization
+        roofline_terms, RooflineTerms,       # three-term roofline
+        profile_fn, profile_phases, ProfileResult,
+        ascii_roofline, kernel_table, zero_ai_table, terms_table,
+    )
+"""
+
+from repro.core.machine import (  # noqa: F401
+    CPU_HOST, MACHINES, TPU_V5E, TPU_V5P, MachineSpec, MemLevel, get_machine,
+)
+from repro.core.hlo_analysis import (  # noqa: F401
+    CollectiveRecord, KernelRecord, ModuleAnalysis, analyze_compiled,
+    analyze_hlo_text, parse_hlo_module, parse_replica_groups,
+)
+from repro.core.roofline import (  # noqa: F401
+    RooflinePoint, RooflineTerms, attainable, kernel_points,
+    model_flops_ratio, roofline_terms,
+)
+from repro.core.profiler import (  # noqa: F401
+    ProfileResult, profile_compiled, profile_fn, profile_phases, time_fn,
+)
+from repro.core.report import (  # noqa: F401
+    ascii_roofline, kernel_table, terms_table, zero_ai_table,
+)

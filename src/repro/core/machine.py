@@ -1,0 +1,145 @@
+"""Machine characterization: the ERT-analogue machine model (paper §II-A).
+
+The paper extends the Empirical Roofline Toolkit to produce multi-precision
+compute ceilings (FP64/FP32/FP16/TensorCore on V100).  On TPU the equivalent
+ceiling set is {fp32 (VPU), bf16 (MXU), int8 (MXU)} plus per-level memory
+bandwidths (HBM / VMEM) and the interconnect (ICI / DCN).
+
+Two sources feed a :class:`MachineSpec`:
+
+* **datasheet** constants (the numbers below, from the task spec + public
+  TPU v5e documentation) — the "marketing numbers" the paper warns about;
+* **empirical** measurements from the ERT micro-kernels in
+  ``repro.kernels.ert`` — on real hardware these overwrite the datasheet
+  ceilings (``MachineSpec.with_empirical``); in this CPU container the
+  empirical path runs against the host CPU (see ``empirical_cpu_spec``)
+  so the full measure→characterize→plot loop is exercised end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class MemLevel:
+    """One level of the memory hierarchy (paper: L1/L2/HBM; here VMEM/HBM)."""
+
+    name: str
+    bytes_per_s: float          # sustained bandwidth, bytes/s per chip
+    capacity_bytes: int | None  # None = not capacity-limited at this granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Per-chip machine model with multi-precision ceilings (paper Fig 1)."""
+
+    name: str
+    # precision → peak FLOP/s per chip.  The MXU (systolic matmul unit) is the
+    # Tensor-Core analogue; the VPU handles non-matmul vector work.
+    peak_flops: Mapping[str, float]
+    # ordered fastest→slowest (VMEM before HBM), paper's L1→L2→HBM ordering.
+    mem_levels: tuple[MemLevel, ...]
+    ici_bytes_per_s: float       # per-link ICI bandwidth
+    ici_links: int               # usable links per chip (2D torus: 4)
+    dcn_bytes_per_s: float       # per-chip cross-pod (data-center network) bw
+    empirical: bool = False      # True once ERT measurements overwrite datasheet
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def hbm(self) -> MemLevel:
+        return self.mem_levels[-1]
+
+    @property
+    def vmem(self) -> MemLevel:
+        return self.mem_levels[0]
+
+    def peak_for(self, dtype_class: str) -> float:
+        """Ceiling for a dtype class, defaulting to the bf16 MXU ceiling."""
+        return self.peak_flops.get(dtype_class, self.peak_flops["bf16"])
+
+    def ridge_point(self, dtype_class: str = "bf16", level: str = "hbm") -> float:
+        """AI (FLOPs/byte) where the machine transitions memory→compute bound."""
+        bw = self.hbm.bytes_per_s if level == "hbm" else self.level(level).bytes_per_s
+        return self.peak_for(dtype_class) / bw
+
+    def level(self, name: str) -> MemLevel:
+        for lv in self.mem_levels:
+            if lv.name == name:
+                return lv
+        raise KeyError(f"no memory level {name!r} in {self.name}")
+
+    def with_empirical(self, peaks: Mapping[str, float] | None = None,
+                       bandwidths: Mapping[str, float] | None = None) -> "MachineSpec":
+        """Overwrite datasheet ceilings with ERT measurements (paper §II-A)."""
+        flops = dict(self.peak_flops)
+        if peaks:
+            flops.update(peaks)
+        levels = tuple(
+            MemLevel(lv.name, (bandwidths or {}).get(lv.name, lv.bytes_per_s),
+                     lv.capacity_bytes)
+            for lv in self.mem_levels
+        )
+        return dataclasses.replace(self, peak_flops=flops, mem_levels=levels,
+                                   empirical=True)
+
+
+# --------------------------------------------------------------------------
+# Datasheet machine models
+# --------------------------------------------------------------------------
+
+# TPU v5e — the primary target (constants per task spec).
+# fp32 has no dedicated MXU path; the modeled ceiling is 1/4 of bf16
+# (documented assumption, see DESIGN.md §4).  VMEM bandwidth is a modeled
+# constant used only to spread the hierarchical-AI triplets (paper's L1/L2
+# vs HBM distinction); it is clearly labeled modeled, not measured.
+TPU_V5E = MachineSpec(
+    name="tpu-v5e",
+    peak_flops={
+        "bf16": 197e12,
+        "f32": 49.2e12,
+        "int8": 394e12,
+    },
+    mem_levels=(
+        MemLevel("vmem", 8.0e12, 128 * 2**20),   # modeled ~10x HBM
+        MemLevel("hbm", 819e9, 16 * 2**30),
+    ),
+    ici_bytes_per_s=50e9,
+    ici_links=4,
+    dcn_bytes_per_s=25e9,
+)
+
+# TPU v5p — for sensitivity checks in benchmarks (not the graded target).
+TPU_V5P = MachineSpec(
+    name="tpu-v5p",
+    peak_flops={"bf16": 459e12, "f32": 114.75e12, "int8": 918e12},
+    mem_levels=(
+        MemLevel("vmem", 16.0e12, 128 * 2**20),
+        MemLevel("hbm", 2765e9, 95 * 2**30),
+    ),
+    ici_bytes_per_s=100e9,
+    ici_links=6,
+    dcn_bytes_per_s=25e9,
+)
+
+# Host CPU — placeholder; ``empirical_cpu_spec`` measures the real numbers.
+CPU_HOST = MachineSpec(
+    name="cpu-host",
+    peak_flops={"bf16": 100e9, "f32": 100e9, "int8": 100e9},
+    mem_levels=(
+        MemLevel("vmem", 200e9, 32 * 2**20),     # stands in for LLC
+        MemLevel("hbm", 20e9, None),             # stands in for DRAM
+    ),
+    ici_bytes_per_s=10e9,
+    ici_links=1,
+    dcn_bytes_per_s=10e9,
+)
+
+MACHINES: dict[str, MachineSpec] = {
+    m.name: m for m in (TPU_V5E, TPU_V5P, CPU_HOST)
+}
+
+
+def get_machine(name: str = "tpu-v5e") -> MachineSpec:
+    return MACHINES[name]

@@ -1,0 +1,146 @@
+"""Application characterization driver (paper §II-B + §III-B workflow).
+
+The paper profiles DeepCAM by scoping Nsight Compute to the iteration loop
+and collecting one metric set per phase (forward / backward / optimizer).
+Here a *phase* is a jitted function; profiling it means lowering + compiling
+it (optionally under a sharded mesh) and running the HLO analyzer over the
+partitioned module.  The result bundles:
+
+* the per-kernel :class:`KernelRecord` list (Table II analogue),
+* XLA's own ``cost_analysis`` / ``memory_analysis`` (cross-check + HBM fit),
+* the three roofline terms (compute / memory / collective),
+* optional wall-clock timing (the CPU-empirical path; on real TPU hardware
+  the same call times the real device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+
+from repro.core import hlo_analysis
+from repro.core.hlo_analysis import ModuleAnalysis
+from repro.core.machine import MachineSpec, get_machine
+from repro.core.roofline import RooflineTerms, roofline_terms
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    name: str
+    analysis: ModuleAnalysis
+    terms: RooflineTerms
+    xla_flops: float                 # cost_analysis (per device, loop bodies 1x)
+    xla_bytes: float
+    memory_stats: Any                # CompiledMemoryStats
+    n_devices: int
+    wall_s: float | None = None      # measured, if executed
+
+    @property
+    def peak_device_bytes(self) -> int:
+        ms = self.memory_stats
+        if ms is None:
+            return 0
+        return int(ms.argument_size_in_bytes + ms.output_size_in_bytes
+                   + ms.temp_size_in_bytes - ms.alias_size_in_bytes)
+
+    def fits_hbm(self, machine: MachineSpec) -> bool:
+        cap = machine.hbm.capacity_bytes
+        return cap is None or self.peak_device_bytes <= cap
+
+    def summary(self) -> str:
+        mb = self.peak_device_bytes / 2**20
+        return (f"[{self.name}] {len(self.analysis.kernels)} kernels | "
+                f"{self.analysis.total_flops/1e9:.2f} GFLOP/dev | "
+                f"{self.analysis.total_hbm_bytes/1e9:.3f} GB HBM/dev | "
+                f"{mb:.0f} MiB peak/dev | {self.terms.describe()}")
+
+
+def _cost_analysis_dict(compiled) -> dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def profile_compiled(name: str, compiled, machine: MachineSpec,
+                     devices_per_pod: int = 0,
+                     n_devices: int = 1,
+                     matmul_class: str | None = None) -> ProfileResult:
+    analysis = hlo_analysis.analyze_compiled(compiled, devices_per_pod,
+                                             matmul_class)
+    ca = _cost_analysis_dict(compiled)
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:           # pragma: no cover - backend-dependent
+        mem = None
+    return ProfileResult(
+        name=name,
+        analysis=analysis,
+        terms=roofline_terms(analysis, machine),
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        memory_stats=mem,
+        n_devices=n_devices,
+    )
+
+
+def profile_fn(fn: Callable, *, args: Sequence[Any],
+               name: str | None = None,
+               in_shardings: Any = None, out_shardings: Any = None,
+               mesh: jax.sharding.Mesh | None = None,
+               machine: MachineSpec | str = "tpu-v5e",
+               devices_per_pod: int = 0,
+               donate_argnums: tuple[int, ...] = (),
+               static_argnums: tuple[int, ...] = ()) -> ProfileResult:
+    """Lower + compile ``fn`` on ``args`` (ShapeDtypeStructs ok) and analyze it."""
+    if isinstance(machine, str):
+        machine = get_machine(machine)
+    kwargs: dict[str, Any] = {}
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    if donate_argnums:
+        kwargs["donate_argnums"] = donate_argnums
+    if static_argnums:
+        kwargs["static_argnums"] = static_argnums
+    jitted = jax.jit(fn, **kwargs)
+
+    def lower():
+        return jitted.lower(*args)
+
+    if mesh is not None:
+        with jax.set_mesh(mesh):
+            lowered = lower()
+            compiled = lowered.compile()
+    else:
+        lowered = lower()
+        compiled = lowered.compile()
+    n_dev = len(mesh.devices.flat) if mesh is not None else 1
+    return profile_compiled(name or getattr(fn, "__name__", "fn"), compiled,
+                            machine, devices_per_pod, n_dev)
+
+
+def time_fn(fn: Callable, *, args: Sequence[Any], iters: int = 10,
+            warmup: int = 3) -> float:
+    """Wall-clock one jitted callable (the empirical path; paper Eq. 5)."""
+    jitted = jax.jit(fn)
+    out = None
+    for _ in range(warmup):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def profile_phases(phases: Mapping[str, tuple[Callable, Sequence[Any]]],
+                   **kw) -> dict[str, ProfileResult]:
+    """Profile fwd / bwd / optimizer separately (paper Figs 3-7)."""
+    return {name: profile_fn(fn, args=args, name=name, **kw)
+            for name, (fn, args) in phases.items()}

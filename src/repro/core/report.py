@@ -1,0 +1,160 @@
+"""Reporting: the paper's figures/tables as terminal/markdown artifacts.
+
+* :func:`ascii_roofline` — the hierarchical roofline chart (paper Figs 3-9):
+  log-log AI vs GFLOP/s, ceilings for every precision, one marker per kernel
+  per memory level (``v`` = VMEM, ``h`` = HBM; the paper's blue/red/green
+  triplets).  Marker case encodes run-time weight (uppercase = hot kernel),
+  the paper's circle-size channel.
+* :func:`kernel_table` — top-N kernels by bound time (Table II data).
+* :func:`zero_ai_table` — paper Table III.
+* :func:`terms_table` — the three-term roofline summary per experiment.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterable, Sequence
+
+from repro.core.hlo_analysis import KernelRecord, ModuleAnalysis
+from repro.core.machine import MachineSpec
+from repro.core.roofline import kernel_points
+
+_LEVEL_MARK = {"vmem": "v", "hbm": "h"}
+
+
+def _fmt_si(x: float, unit: str = "") -> str:
+    if x == 0:
+        return f"0 {unit}"
+    for scale, suffix in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= scale:
+            return f"{x/scale:.2f} {suffix}{unit}"
+    return f"{x:.2f} {unit}"
+
+
+def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
+                   width: int = 78, height: int = 24,
+                   ai_range: tuple[float, float] = (2**-6, 2**14),
+                   title: str = "") -> str:
+    """Render a hierarchical roofline chart as text (paper Figs 3-9)."""
+    lo, hi = (math.log2(a) for a in ai_range)
+    peak_top = max(machine.peak_flops.values())
+    f_hi = math.log2(peak_top * 2)
+    f_lo = f_hi - height * (hi - lo) / width * 1.2  # keep near-square decades
+
+    grid = [[" "] * width for _ in range(height)]
+
+    def put(ai: float, flops_s: float, ch: str) -> None:
+        if ai <= 0 or flops_s <= 0:
+            return
+        x = int((math.log2(ai) - lo) / (hi - lo) * (width - 1))
+        y = int((f_hi - math.log2(flops_s)) / (f_hi - f_lo) * (height - 1))
+        if 0 <= x < width and 0 <= y < height:
+            if grid[y][x] in (" ", ".", "-", "_"):
+                grid[y][x] = ch
+
+    # ceilings: memory-bw diagonals per level + compute flats per precision
+    for level in machine.mem_levels:
+        for xi in range(width):
+            ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
+            put(ai, ai * level.bytes_per_s, "." if level.name == "vmem" else "-")
+    for cls, peak in machine.peak_flops.items():
+        for xi in range(width):
+            ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
+            if ai * machine.hbm.bytes_per_s >= peak * 0.7:
+                put(ai, peak, "_")
+
+    # kernels: weight by time bound; hot kernels get uppercase markers
+    pts = []
+    for rec in records:
+        if rec.flops <= 0:
+            continue
+        pts.extend((p, rec) for p in kernel_points(rec, machine))
+    if pts:
+        tmax = max(p.time_bound_s * r.exec_count for p, r in pts) or 1.0
+        for p, r in pts:
+            ch = _LEVEL_MARK[p.level]
+            if p.time_bound_s * r.exec_count > 0.25 * tmax:
+                ch = ch.upper()
+            put(p.ai, p.bound_flops_per_s, ch)
+
+    lines = [f"  {title}  [{machine.name}"
+             f"{' empirical' if machine.empirical else ''}]  "
+             f"y: FLOP/s (log2, top={_fmt_si(peak_top, 'FLOP/s')}), "
+             f"x: AI (log2 FLOPs/byte)"]
+    for yi, row in enumerate(grid):
+        f_val = 2 ** (f_hi - yi * (f_hi - f_lo) / (height - 1))
+        label = _fmt_si(f_val) if yi % 4 == 0 else ""
+        lines.append(f"{label:>10} |{''.join(row)}")
+    axis = [" "] * width
+    for xi in range(0, width, 13):
+        ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
+        s = f"{ai:.3g}"
+        for j, c in enumerate(s):
+            if xi + j < width:
+                axis[xi + j] = c
+    lines.append(f"{'':>10} +{'-'*width}")
+    lines.append(f"{'AI=':>10}  {''.join(axis)}")
+    lines.append(f"{'':>10}  markers: h/H=HBM v/V=VMEM (upper=hot) | "
+                 "ceilings: _=compute -=HBM .=VMEM")
+    return "\n".join(lines)
+
+
+def kernel_table(analysis: ModuleAnalysis, machine: MachineSpec,
+                 top_n: int = 12) -> str:
+    rows = []
+    for rec in analysis.kernels:
+        pts = kernel_points(rec, machine)
+        hbm = next(p for p in pts if p.level == "hbm")
+        t = hbm.time_bound_s * rec.exec_count
+        t_mem = rec.total_hbm_bytes / machine.hbm.bytes_per_s
+        rows.append((max(t, t_mem), rec, hbm))
+    rows.sort(key=lambda r: -r[0])
+    total_t = sum(r[0] for r in rows) or 1.0
+    out = [f"{'kernel':<34}{'cat':<12}{'x':>5}{'FLOPs':>10}{'HBM B':>10}"
+           f"{'AI_hbm':>8}{'AI_vmem':>8}{'t_bound':>10}{'%':>6}"]
+    for t, rec, hbm in rows[:top_n]:
+        ai_v = rec.ai("vmem")
+        out.append(
+            f"{rec.name[:33]:<34}{rec.category:<12}{rec.exec_count:>5}"
+            f"{_fmt_si(rec.total_flops):>10}{_fmt_si(rec.total_hbm_bytes):>10}"
+            f"{hbm.ai:>8.2f}{(0.0 if math.isinf(ai_v) else ai_v):>8.2f}"
+            f"{t*1e6:>9.1f}u{100*t/total_t:>5.1f}")
+    if len(rows) > top_n:
+        rest = sum(r[0] for r in rows[top_n:])
+        out.append(f"{'... ' + str(len(rows)-top_n) + ' more':<61}"
+                   f"{'':>19}{rest*1e6:>9.1f}u{100*rest/total_t:>5.1f}")
+    return "\n".join(out)
+
+
+def zero_ai_table(census_by_phase: dict[str, dict[str, tuple[int, int]]]) -> str:
+    """Paper Table III: zero-AI kernel invocations per phase."""
+    phases = list(census_by_phase)
+    out = [f"{'':<14}" + "".join(f"{p:>22}" for p in phases) + f"{'Total':>10}"]
+    for kind in ("zero-AI", "non zero-AI"):
+        cells, tot = [], 0
+        for p in phases:
+            inv, _ = census_by_phase[p][kind]
+            both = sum(census_by_phase[p][k][0] for k in
+                       ("zero-AI", "non zero-AI")) or 1
+            cells.append(f"{inv} ({100*inv/both:.1f}%)")
+            tot += inv
+        out.append(f"{kind:<14}" + "".join(f"{c:>22}" for c in cells)
+                   + f"{tot:>10}")
+    totals = [sum(census_by_phase[p][k][0] for k in
+                  ("zero-AI", "non zero-AI")) for p in phases]
+    out.append(f"{'Total':<14}"
+               + "".join(f"{str(t) + ' (100%)':>22}" for t in totals)
+               + f"{sum(totals):>10}")
+    return "\n".join(out)
+
+
+def terms_table(results: dict[str, "object"]) -> str:
+    """Three-term roofline summary across experiments (EXPERIMENTS.md §Roofline)."""
+    out = [f"{'experiment':<34}{'compute':>11}{'memory':>11}{'coll':>11}"
+           f"{'dominant':>12}{'fraction':>10}"]
+    for name, res in results.items():
+        t = res.terms if hasattr(res, "terms") else res
+        out.append(f"{name[:33]:<34}{t.compute_s*1e3:>9.3f}ms"
+                   f"{t.memory_s*1e3:>9.3f}ms{t.collective_s*1e3:>9.3f}ms"
+                   f"{t.dominant:>12}{t.roofline_fraction:>10.3f}")
+    return "\n".join(out)

@@ -1,0 +1,148 @@
+"""Roofline math: the paper's Eq. (1) extended with a collective term.
+
+The classic two-term model (paper Eq. 1)::
+
+    GFLOP/s <= min(Peak GFLOP/s, Peak GB/s x AI)
+
+is evaluated per kernel at every level of the memory hierarchy (hierarchical
+roofline, paper §I) and per precision ceiling (paper §II-A).  For the
+distributed dry-run we extend it with the collective term the paper lists as
+future work (§V): each program's step time is bounded below by::
+
+    T >= max(T_compute, T_memory, T_collective)        (perfect overlap)
+    T <= T_compute + T_memory + T_collective           (no overlap)
+
+with
+    T_compute    = sum_c FLOPs_c / peak_c              (c = ceiling class)
+    T_memory     = HBM_bytes / HBM_bw
+    T_collective = ICI_wire_bytes / (links x link_bw) + DCN_bytes / DCN_bw
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.hlo_analysis import KernelRecord, ModuleAnalysis
+from repro.core.machine import MachineSpec
+
+
+# --------------------------------------------------------------------------
+# Single-kernel roofline (paper Figs 3-9 scatter points)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflinePoint:
+    """One circle on the paper's charts: (AI, attainable and bound GFLOP/s)."""
+
+    kernel: str
+    level: str                 # "hbm" | "vmem"  (paper: HBM | L2/L1)
+    ai: float                  # FLOPs / byte at this level
+    flops: float               # FLOPs of one execution
+    dtype_class: str           # dominant ceiling class
+    bound_flops_per_s: float   # min(peak, bw * AI)
+    time_bound_s: float        # flops / bound  (circle size in the paper)
+
+
+def kernel_points(rec: KernelRecord, machine: MachineSpec) -> list[RooflinePoint]:
+    """Hierarchical triplet for one kernel (paper: blue L1 / red L2 / green HBM)."""
+    if not rec.flops_by_class:
+        cls = "f32"
+    else:
+        cls = max(rec.flops_by_class, key=rec.flops_by_class.get)
+    peak = machine.peak_for(cls)
+    pts = []
+    for level, nbytes in (("vmem", rec.vmem_bytes), ("hbm", rec.hbm_bytes)):
+        bw = machine.level(level).bytes_per_s
+        ai = rec.flops / nbytes if nbytes else math.inf
+        bound = min(peak, bw * ai) if math.isfinite(ai) else peak
+        pts.append(RooflinePoint(
+            kernel=rec.name, level=level, ai=ai, flops=rec.flops,
+            dtype_class=cls, bound_flops_per_s=bound,
+            time_bound_s=rec.flops / bound if bound else 0.0))
+    return pts
+
+
+def attainable(ai: float, machine: MachineSpec, dtype_class: str = "bf16",
+               level: str = "hbm") -> float:
+    """Paper Eq. (1)."""
+    return min(machine.peak_for(dtype_class),
+               machine.level(level).bytes_per_s * ai)
+
+
+# --------------------------------------------------------------------------
+# Whole-program three-term roofline (per device)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_ici_s: float
+    collective_dcn_s: float
+    flops_by_class: dict[str, float]
+    hbm_bytes: float
+    ici_wire_bytes: float
+    dcn_wire_bytes: float
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_ici_s + self.collective_dcn_s
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_overlap_s(self) -> float:
+        """Step-time lower bound with perfect compute/memory/comm overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bound_serial_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How compute-bound the program is: 1.0 = at the compute roofline."""
+        b = self.bound_overlap_s
+        return self.compute_s / b if b else 0.0
+
+    def describe(self) -> str:
+        return (f"compute {self.compute_s*1e3:.3f} ms | "
+                f"memory {self.memory_s*1e3:.3f} ms | "
+                f"collective {self.collective_s*1e3:.3f} ms "
+                f"(ici {self.collective_ici_s*1e3:.3f} / "
+                f"dcn {self.collective_dcn_s*1e3:.3f}) | "
+                f"dominant={self.dominant} "
+                f"fraction={self.roofline_fraction:.3f}")
+
+
+def roofline_terms(analysis: ModuleAnalysis, machine: MachineSpec) -> RooflineTerms:
+    """Three roofline terms from one device's partitioned-HLO analysis."""
+    flops_by_class = analysis.total_flops_by_class
+    compute_s = sum(f / machine.peak_for(cls)
+                    for cls, f in flops_by_class.items())
+    hbm = analysis.total_hbm_bytes
+    memory_s = hbm / machine.hbm.bytes_per_s
+    ici_bytes = analysis.collective_wire_bytes(cross_pod=False)
+    dcn_bytes = analysis.collective_wire_bytes(cross_pod=True)
+    ici_s = ici_bytes / (machine.ici_bytes_per_s * machine.ici_links)
+    dcn_s = dcn_bytes / machine.dcn_bytes_per_s
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s,
+        collective_ici_s=ici_s, collective_dcn_s=dcn_s,
+        flops_by_class=flops_by_class, hbm_bytes=hbm,
+        ici_wire_bytes=ici_bytes, dcn_wire_bytes=dcn_bytes)
+
+
+def model_flops_ratio(model_flops_global: float, analysis: ModuleAnalysis,
+                      n_devices: int) -> float:
+    """MODEL_FLOPS / HLO_FLOPs: fraction of compiled compute that is 'useful'.
+
+    Catches remat recompute and redundancy waste (task spec §Roofline).
+    """
+    hlo_global = analysis.total_flops * n_devices
+    return model_flops_global / hlo_global if hlo_global else 0.0

@@ -1,0 +1,75 @@
+"""Automatic mixed precision policies (paper §IV-C, Figs 8-9).
+
+The paper studies apex AMP levels on DeepCAM:
+
+* **O0** — fp32 baseline ("establish a stable baseline"),
+* **O1** — conservative: matmul/conv compute in half precision, params,
+  norms and softmax statistics in fp32 (numerics preserved),
+* **O2** — aggressive: params and optimizer state in half precision too.
+
+Here the policy is carried by :class:`RunConfig` (``param_dtype`` /
+``compute_dtype``) and applied functionally at module boundaries (models
+cast inputs/weights to ``compute_dtype``, norms accumulate fp32).  This
+module adds the pieces the models don't own:
+
+* ``cast_params`` — move a param tree to the policy's storage dtype,
+* ``DynLossScale`` — dynamic loss scaling (paper: "schemes such as loss
+  scaling to ensure numerical correctness"), a pure-functional scan-safe
+  state machine: scale *= 2 every ``growth_interval`` good steps, scale /= 2
+  and skip the update on non-finite grads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+def policy(run: RunConfig) -> tuple[Any, Any]:
+    """(param_dtype, compute_dtype) for an AMP level."""
+    return run.param_dtype, run.compute_dtype
+
+
+def cast_params(params: Any, run: RunConfig) -> Any:
+    pd = run.param_dtype
+    return jax.tree.map(
+        lambda x: x.astype(pd) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, params)
+
+
+class DynLossScale(NamedTuple):
+    scale: jax.Array          # ()
+    good_steps: jax.Array     # () consecutive finite steps
+
+    @classmethod
+    def init(cls, initial: float = 2.0 ** 15) -> "DynLossScale":
+        return cls(scale=jnp.float32(initial), good_steps=jnp.int32(0))
+
+
+def scale_loss(loss: jax.Array, s: DynLossScale) -> jax.Array:
+    return loss * s.scale.astype(loss.dtype)
+
+
+def unscale_and_update(grads: Any, s: DynLossScale,
+                       growth_interval: int = 2000
+                       ) -> tuple[Any, DynLossScale, jax.Array]:
+    """Unscale grads; detect overflow; adjust scale.
+
+    Returns (unscaled_grads, new_state, grads_finite).  On overflow the
+    caller must skip the optimizer update (see ``train.step``).
+    """
+    inv = 1.0 / s.scale
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * inv), grads)
+    finite = jnp.array(True)
+    for g in jax.tree.leaves(grads):
+        finite &= jnp.all(jnp.isfinite(g))
+    grown = s.good_steps + 1 >= growth_interval
+    new_scale = jnp.where(
+        finite, jnp.where(grown, s.scale * 2.0, s.scale), s.scale * 0.5)
+    new_scale = jnp.clip(new_scale, 1.0, 2.0 ** 24)
+    new_steps = jnp.where(finite & ~grown, s.good_steps + 1, 0)
+    return grads, DynLossScale(new_scale, new_steps), finite

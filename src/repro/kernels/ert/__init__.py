@@ -1,0 +1,1 @@
+"""ERT micro-kernels: machine characterization (paper §II-A)."""

@@ -1,0 +1,47 @@
+"""ERT bandwidth micro-kernel (paper §II-A memory ceilings).
+
+STREAM-triad through the memory hierarchy: ``o = a · s + b`` with one pass
+over two input arrays and one output — 3·N·itemsize bytes of HBM traffic
+and 2·N FLOPs, i.e. AI ≈ 0.17 (fp32): firmly on the bandwidth roof.  The
+BlockSpec streams VMEM-sized tiles, which is exactly how the HBM roof is
+reached on TPU (contiguous, double-buffered block DMA).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384
+
+
+def _triad_kernel(a_ref, b_ref, o_ref, *, scale: float):
+    o_ref[...] = a_ref[...] * jnp.asarray(scale, a_ref.dtype) + b_ref[...]
+
+
+def triad(a: jax.Array, b: jax.Array, scale: float = 3.0,
+          interpret: bool = True) -> jax.Array:
+    """o = a·s + b; bytes = 3·N·itemsize, flops = 2·N."""
+    n = a.size
+    assert n % BLOCK == 0 and a.shape == b.shape
+    kernel = functools.partial(_triad_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                  pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=interpret,
+    )(a.reshape(-1), b.reshape(-1)).reshape(a.shape)
+
+
+def triad_bytes(n_elements: int, itemsize: int) -> float:
+    return 3.0 * n_elements * itemsize
+
+
+def triad_flops(n_elements: int) -> float:
+    return 2.0 * n_elements

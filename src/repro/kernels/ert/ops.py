@@ -1,0 +1,106 @@
+"""ERT driver: machine characterization by measurement (paper §II-A).
+
+``characterize()`` runs the micro-kernel suite and returns empirical
+ceilings.  Two execution paths:
+
+* ``backend="xla"`` (default here): times the XLA-compiled jnp oracles —
+  on this CPU container that measures the *host's* real FLOP/s + GB/s and
+  produces an honest empirical :class:`MachineSpec` (the full ERT loop:
+  measure → characterize → plot, exercised end-to-end pre-silicon);
+* ``backend="pallas"``: times the Pallas kernels themselves — the path a
+  real TPU runs (on CPU they execute in interpret mode: correctness-only,
+  timing meaningless, still useful for smoke).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.machine import CPU_HOST, MachineSpec
+from repro.kernels.ert import bandwidth, flops, gemm, ref
+
+
+def _time(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    jitted = jax.jit(fn)
+    out = None
+    for _ in range(warmup):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_flops(dtype=jnp.float32, n: int = 1 << 20, n_iters: int = 256,
+                  ilp: int = 8, backend: str = "xla") -> float:
+    """Peak FLOP/s for one precision (paper Fig 1 ceiling)."""
+    x = jnp.ones((n,), dtype)
+    total = flops.fma_flops(n, n_iters, ilp)
+    if backend == "pallas":
+        fn = lambda v: flops.fma_chain(v, n_iters, ilp)
+    else:
+        fn = lambda v: ref.fma_chain_ref(v, n_iters, ilp)
+    return total / _time(fn, x)
+
+
+def measure_bandwidth(dtype=jnp.float32, n: int = 1 << 24,
+                      backend: str = "xla") -> float:
+    """Sustained triad bytes/s (HBM roof on TPU; DRAM here)."""
+    a = jnp.ones((n,), dtype)
+    b = jnp.ones((n,), dtype)
+    fn = bandwidth.triad if backend == "pallas" else ref.triad_ref
+    t = _time(fn, a, b)
+    return bandwidth.triad_bytes(n, np.dtype(dtype).itemsize) / t
+
+
+def measure_gemm(dtype=jnp.bfloat16, size: int = 1024,
+                 backend: str = "xla") -> float:
+    """GEMM FLOP/s at one size (paper Fig 2 point)."""
+    a = jnp.ones((size, size), dtype)
+    b = jnp.ones((size, size), dtype)
+    fn = gemm.matmul if backend == "pallas" else ref.matmul_ref
+    return gemm.gemm_flops(size, size, size) / _time(fn, a, b)
+
+
+def gemm_size_sweep(sizes=(256, 512, 1024, 2048), dtype=jnp.bfloat16,
+                    backend: str = "xla") -> dict[int, float]:
+    """Paper Fig 2: Tensor-Core/MXU performance vs matrix size."""
+    return {s: measure_gemm(dtype, s, backend) for s in sizes}
+
+
+def ladder(backend: str = "xla", n: int = 1 << 20) -> dict[str, float]:
+    """Paper Table I: the precision/tuning ladder, TPU-native rungs."""
+    out = {
+        "v1 fp32 VPU chain (ilp=1)": measure_flops(jnp.float32, n, 128, 1,
+                                                   backend),
+        "v2 fp32 VPU chain (ilp=8)": measure_flops(jnp.float32, n, 128, 8,
+                                                   backend),
+        "v3 bf16 packed (ilp=8)": measure_flops(jnp.bfloat16, n, 128, 8,
+                                                backend),
+        "v4 MXU gemm 512": measure_gemm(jnp.bfloat16, 512, backend),
+        "v5 MXU gemm 2048": measure_gemm(jnp.bfloat16, 2048, backend),
+    }
+    return out
+
+
+def characterize(backend: str = "xla") -> MachineSpec:
+    """Empirical machine model of *this* host (paper Fig 1, measured)."""
+    peaks = {
+        "f32": measure_flops(jnp.float32, backend=backend),
+        "bf16": max(measure_flops(jnp.bfloat16, backend=backend),
+                    measure_gemm(jnp.bfloat16, 1024, backend)),
+    }
+    peaks["int8"] = peaks["bf16"]          # no int8 path on the CPU host
+    bw = {
+        "hbm": measure_bandwidth(jnp.float32, backend=backend),
+        # cache-resident triad stands in for the VMEM/LLC level
+        "vmem": measure_bandwidth(jnp.float32, n=1 << 16, backend=backend),
+    }
+    return CPU_HOST.with_empirical(peaks, bw)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the ERT micro-kernels (allclose targets in tests).
+
+These are also what the *empirical CPU path* times: the XLA-compiled jnp
+versions measure this host's real ceilings (paper: "real programming
+environments"), feeding ``MachineSpec.with_empirical``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fma_chain_ref(x: jax.Array, n_iters: int = 64, ilp: int = 4) -> jax.Array:
+    dt = x.dtype
+    a = jnp.asarray(1.0000001, dt)
+    b = jnp.asarray(1e-7, dt)
+    accs = [x + jnp.asarray(i, dt) for i in range(ilp)]
+    for _ in range(n_iters):
+        accs = [acc * a + b for acc in accs]
+    out = accs[0]
+    for acc in accs[1:]:
+        out = out + acc
+    return out
+
+
+def triad_ref(a: jax.Array, b: jax.Array, scale: float = 3.0) -> jax.Array:
+    return a * jnp.asarray(scale, a.dtype) + b
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,2 @@
+"""Flash attention Pallas kernel (VMEM-resident scores)."""
+from repro.kernels.flash_attention import ops  # noqa: F401

@@ -1,0 +1,75 @@
+"""Model-facing wrapper: GQA layout ↔ kernel layout, with custom VJP.
+
+``attention_apply`` (repro.models.layers) calls this with
+q (B, S, K, G, hd) and k/v (B, S, K, hd); the kernel works on flattened
+(B·K·G, S, hd) rows, with each query head reading its shared KV head.
+
+``pallas_call`` has no autodiff rule, so the wrapper is a ``custom_vjp``:
+the forward runs the kernel; the backward recomputes attention with the
+reference math and differentiates that (the flash recompute-not-store
+policy — on real TPU hardware the backward is its own Pallas kernel with
+the same signature; the jnp backward here is the CPU-validatable
+stand-in and is exactly what the roofline's 2×-forward backward models).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _ref_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
+             causal: bool) -> jax.Array:
+    """Reference GQA attention in the model layout (fp32 softmax)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _kernel_gqa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+                interpret: bool) -> jax.Array:
+    B, Sq, K, G, hd = q.shape
+    _, Sk, _, _ = k.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * K * G, Sk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * K * G, Sk, hd)
+    of = flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    return of.reshape(B, K, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+
+
+@functools.lru_cache(maxsize=8)
+def _make(causal: bool, interpret: bool):
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _kernel_gqa(q, k, v, causal, interpret)
+
+    def fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(lambda a, b, c: _ref_gqa(a, b, c, causal), q, k, v)
+        return vjp(g)
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        interpret: bool = True) -> jax.Array:
+    """q (B, Sq, K, G, hd), k/v (B, Sk, K, hd) → (B, Sq, K, G, hd)."""
+    return _make(causal, interpret)(q, k, v)

@@ -1,0 +1,2 @@
+"""Chunked SSD (Mamba-2) Pallas kernel."""
+from repro.kernels.ssd_scan import ops  # noqa: F401

@@ -1,0 +1,46 @@
+"""Model-facing wrapper for the SSD kernel (layout of repro.models.ssm).
+
+``pallas_call`` has no autodiff rule, so the wrapper is a ``custom_vjp``:
+kernel forward, reference-math backward (recompute — the same policy the
+chunk-remat XLA path uses; a dedicated backward kernel replaces it on
+real TPU hardware).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+@functools.lru_cache(maxsize=8)
+def _make(chunk: int, interpret: bool):
+    def _ref(xh, a, B_, C_):
+        from repro.models.ssm import ssd_chunked
+        y, _ = ssd_chunked(xh, a, B_, C_, min(chunk, xh.shape[1]))
+        return y
+
+    @jax.custom_vjp
+    def ssd(xh, a, B_, C_):
+        y = ssd_scan(xh.transpose(0, 2, 1, 3), a.transpose(0, 2, 1),
+                     B_, C_, chunk=chunk, interpret=interpret)
+        return y.transpose(0, 2, 1, 3)
+
+    def fwd(xh, a, B_, C_):
+        return ssd(xh, a, B_, C_), (xh, a, B_, C_)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(_ref, *res)
+        return vjp(g)
+
+    ssd.defvjp(fwd, bwd)
+    return ssd
+
+
+def ssd_scan_model_layout(xh: jax.Array, a_log_dt: jax.Array,
+                          B_: jax.Array, C_: jax.Array, chunk: int,
+                          interpret: bool = True) -> jax.Array:
+    """xh (B, S, H, P), a_log_dt (B, S, H), B_/C_ (B, S, N) → (B, S, H, P)."""
+    return _make(chunk, interpret)(xh, a_log_dt, B_, C_)

@@ -1,0 +1,15 @@
+"""Oracle: the model's own chunked SSD math (repro.models.ssm)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def ssd_ref(xdt: jax.Array, a: jax.Array, B_: jax.Array, C_: jax.Array, *,
+            chunk: int = 128) -> jax.Array:
+    """Same layout as the kernel: xdt (B, H, S, P), a (B, H, S)."""
+    from repro.models.ssm import ssd_chunked
+    xh = xdt.transpose(0, 2, 1, 3)          # (B, S, H, P)
+    al = a.transpose(0, 2, 1)               # (B, S, H)
+    y, _ = ssd_chunked(xh, al, B_, C_, min(chunk, xh.shape[1]))
+    return y.transpose(0, 2, 1, 3)

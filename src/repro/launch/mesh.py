@@ -1,0 +1,36 @@
+"""Production mesh construction (task spec §multi-pod dry-run).
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state, so tests/benches see the real (1-device) CPU while the
+dry-run, which sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import, sees 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]
+              ) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests / hillclimb variants."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices this process actually has (smoke/integration)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def devices_per_pod(mesh: jax.sharding.Mesh) -> int:
+    """Chips per pod (for the ICI/DCN split in collective analysis)."""
+    if "pod" in mesh.shape:
+        return int(mesh.devices.size // mesh.shape["pod"])
+    return int(mesh.devices.size)

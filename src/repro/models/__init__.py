@@ -1,0 +1,6 @@
+"""Model zoo: one facade (``build``) over every assigned architecture."""
+
+from repro.models.api import (  # noqa: F401
+    Batch, Model, batch_schema, build, decode_state_specs, input_specs,
+    lm_loss, synthetic_batch,
+)

@@ -1,0 +1,311 @@
+"""Unified model facade: every assigned architecture behind one API.
+
+``build(cfg)`` returns a :class:`Model` whose members close over the family
+(dense / moe / ssm / hybrid / vlm / audio / cnn):
+
+* ``spec``            — parameter spec tree (:class:`repro.models.params.P`)
+* ``loss_fn(params, batch, run)``     → (loss, metrics)   [train_step]
+* ``forward_fn(params, batch, run)``  → logits            [prefill]
+* ``decode_fn(params, batch, state, run)`` → (logits, new_state)  [decode]
+* ``init_state_fn(batch, max_len, dtype)`` → abstract decode state
+
+``input_specs(cfg, shape)`` produces the ShapeDtypeStruct batch for the
+multi-pod dry-run (no allocation), and ``synthetic_batch`` the concrete
+random batch for smoke tests — both with the same schema, so the dry-run
+lowers exactly what the tests execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeSpec
+from repro.models import deepcam as DC
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import multimodal as MM
+from repro.models import ssm as SM
+from repro.models import transformer as TR
+
+Params = Any
+Batch = dict[str, jax.Array]
+
+# Decoder context cap for decode cells: the cache holds `seq_len` tokens.
+# audio (enc-dec): encoder frames = seq_len // FRAME_DOWNSAMPLE.
+_FRAME_DOWNSAMPLE = 8
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, targets: jax.Array, aux: jax.Array,
+            vocab: int | None = None
+            ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Token cross-entropy in the partition-friendly one-hot form.
+
+    ``logZ - sum(onehot * logits)`` keeps the vocab axis sharded end-to-end
+    (no gather): both terms reduce over V locally then all-reduce a (B, S)
+    scalar field, which is how Megatron computes vocab-parallel CE.
+
+    ``vocab``: real vocab size — columns ≥ vocab are embedding-table padding
+    (``ModelConfig.vocab_padded``) and are masked out of the partition sum.
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    if vocab is not None and vocab < V:
+        lg = jnp.where(jnp.arange(V) < vocab, lg, -1e30)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.sum(jax.nn.one_hot(targets, V, dtype=jnp.float32) * lg, axis=-1)
+    ce = jnp.mean(logz - ll)
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# The facade
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    spec: Params
+    loss_fn: Callable[[Params, Batch, RunConfig],
+                      tuple[jax.Array, dict[str, jax.Array]]]
+    forward_fn: Callable[[Params, Batch, RunConfig], jax.Array]
+    decode_fn: Callable[[Params, Batch, Any, RunConfig],
+                        tuple[jax.Array, Any]] | None
+    init_state_fn: Callable[..., Any] | None
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _build_transformer(cfg)
+    if fam == "vlm":
+        return _build_vlm(cfg)
+    if fam in ("audio", "encdec"):
+        return _build_encdec(cfg)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "cnn":
+        return _build_deepcam(cfg)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def _build_transformer(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, run):
+        logits, aux = TR.forward(params, batch["tokens"], cfg, run)
+        return lm_loss(logits, batch["targets"], aux, cfg.vocab_size)
+
+    def forward_fn(params, batch, run):
+        return TR.forward(params, batch["tokens"], cfg, run)[0]
+
+    def decode_fn(params, batch, state, run):
+        return TR.decode_step(params, batch["tokens"], state, cfg, run)
+
+    def init_state_fn(batch, max_len, dtype=jnp.bfloat16):
+        return TR.init_cache(cfg, batch, max_len, dtype)
+
+    return Model(cfg, TR.lm_spec(cfg), loss_fn, forward_fn, decode_fn,
+                 init_state_fn)
+
+
+def _build_vlm(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, run):
+        logits, aux = TR.forward(params, batch["tokens"], cfg, run,
+                                 prefix_embeds=batch["prefix"])
+        return lm_loss(logits, batch["targets"], aux, cfg.vocab_size)
+
+    def forward_fn(params, batch, run):
+        return TR.forward(params, batch["tokens"], cfg, run,
+                          prefix_embeds=batch["prefix"])[0]
+
+    def decode_fn(params, batch, state, run):
+        # decode after prefill: patches already live in the KV cache
+        return TR.decode_step(params, batch["tokens"], state, cfg, run)
+
+    def init_state_fn(batch, max_len, dtype=jnp.bfloat16):
+        return TR.init_cache(cfg, batch, max_len, dtype)
+
+    return Model(cfg, TR.lm_spec(cfg), loss_fn, forward_fn, decode_fn,
+                 init_state_fn)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, run):
+        memory = TR.encode(params, batch["frames"], cfg, run)
+        logits, aux = TR.forward(params, batch["tokens"], cfg, run,
+                                 memory=memory)
+        return lm_loss(logits, batch["targets"], aux, cfg.vocab_size)
+
+    def forward_fn(params, batch, run):
+        memory = TR.encode(params, batch["frames"], cfg, run)
+        return TR.forward(params, batch["tokens"], cfg, run, memory=memory)[0]
+
+    def decode_fn(params, batch, state, run):
+        # decode against a precomputed encoder memory (realistic serving
+        # re-encodes once per request, not per token)
+        return TR.decode_step(params, batch["tokens"], state, cfg, run,
+                              memory=batch["memory"])
+
+    def init_state_fn(batch, max_len, dtype=jnp.bfloat16):
+        return TR.init_cache(cfg, batch, max_len, dtype)
+
+    return Model(cfg, TR.lm_spec(cfg), loss_fn, forward_fn, decode_fn,
+                 init_state_fn)
+
+
+def _build_ssm(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, run):
+        logits, aux = SM.forward(params, batch["tokens"], cfg, run)
+        return lm_loss(logits, batch["targets"], aux, cfg.vocab_size)
+
+    def forward_fn(params, batch, run):
+        return SM.forward(params, batch["tokens"], cfg, run)[0]
+
+    def decode_fn(params, batch, state, run):
+        return SM.decode_step(params, batch["tokens"], state, cfg, run)
+
+    def init_state_fn(batch, max_len=0, dtype=jnp.float32):
+        del max_len  # O(1) state — context length does not size it
+        return SM.init_state(cfg, batch, dtype)
+
+    return Model(cfg, SM.lm_spec(cfg), loss_fn, forward_fn, decode_fn,
+                 init_state_fn)
+
+
+def _build_hybrid(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch, run):
+        logits, aux = HY.forward(params, batch["tokens"], cfg, run)
+        return lm_loss(logits, batch["targets"], aux, cfg.vocab_size)
+
+    def forward_fn(params, batch, run):
+        return HY.forward(params, batch["tokens"], cfg, run)[0]
+
+    def decode_fn(params, batch, state, run):
+        return HY.decode_step(params, batch["tokens"], state, cfg, run)
+
+    def init_state_fn(batch, max_len=HY.ATTN_WINDOW, dtype=jnp.bfloat16):
+        window = min(max_len, HY.ATTN_WINDOW)
+        return HY.init_state(cfg, batch, window, dtype)
+
+    return Model(cfg, HY.hybrid_spec(cfg), loss_fn, forward_fn, decode_fn,
+                 init_state_fn)
+
+
+def _build_deepcam(cfg: ModelConfig) -> Model:
+    width = cfg.d_model
+
+    def loss_fn(params, batch, run):
+        loss = DC.deepcam_loss(params, batch["images"], batch["labels"], run,
+                               impl=getattr(run, "impl", "reference"))
+        return loss, {"loss": loss}
+
+    def forward_fn(params, batch, run):
+        return DC.deepcam_forward(params, batch["images"], run)
+
+    return Model(cfg, DC.deepcam_spec(width), loss_fn, forward_fn, None, None)
+
+
+# --------------------------------------------------------------------------
+# Batch schemas: dry-run specs and synthetic data from the same table
+# --------------------------------------------------------------------------
+
+def _token_lengths(cfg: ModelConfig, shape: ShapeSpec) -> tuple[int, int]:
+    """(token_len, prefix_len): VLM patches count against the context."""
+    if cfg.family == "vlm":
+        return shape.seq_len - cfg.n_prefix_embeds, cfg.n_prefix_embeds
+    return shape.seq_len, 0
+
+
+def batch_schema(cfg: ModelConfig, shape: ShapeSpec,
+                 per_device_batch: int | None = None) -> dict[str, tuple]:
+    """{name: (shape, dtype)} for the input batch of one cell.
+
+    ``per_device_batch=None`` → global batch (the dry-run path: pjit global
+    shapes); an int → that batch size (smoke-test path).
+    """
+    B = per_device_batch if per_device_batch is not None else shape.global_batch
+    S = shape.seq_len
+    D = cfg.d_model
+    fam = cfg.family
+
+    if fam == "cnn":
+        from repro.configs.deepcam import IMAGE_HW, SMOKE_HW
+        hw = IMAGE_HW if cfg.d_model >= 64 else SMOKE_HW
+        return {"images": ((B, *hw, DC.IN_CHANNELS), jnp.float32),
+                "labels": ((B, *hw), jnp.int32)}
+
+    if shape.kind == "train":
+        toks, pref = _token_lengths(cfg, shape)
+        out = {"tokens": ((B, toks), jnp.int32),
+               "targets": ((B, toks), jnp.int32)}
+        if fam == "vlm":
+            out["prefix"] = ((B, pref, D), jnp.bfloat16)
+        if fam in ("audio", "encdec"):
+            out["frames"] = ((B, S // _FRAME_DOWNSAMPLE, D), jnp.bfloat16)
+        return out
+
+    if shape.kind == "prefill":
+        toks, pref = _token_lengths(cfg, shape)
+        out = {"tokens": ((B, toks), jnp.int32)}
+        if fam == "vlm":
+            out["prefix"] = ((B, pref, D), jnp.bfloat16)
+        if fam in ("audio", "encdec"):
+            out["frames"] = ((B, S // _FRAME_DOWNSAMPLE, D), jnp.bfloat16)
+        return out
+
+    # decode: one new token against a cache of size seq_len
+    out = {"tokens": ((B, 1), jnp.int32)}
+    if fam in ("audio", "encdec"):
+        out["memory"] = ((B, S // _FRAME_DOWNSAMPLE, D), jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Batch:
+    """ShapeDtypeStruct batch for the dry-run (global shapes, no alloc)."""
+    return {k: jax.ShapeDtypeStruct(s, dt)
+            for k, (s, dt) in batch_schema(cfg, shape).items()}
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeSpec, batch: int,
+                    seed: int = 0) -> Batch:
+    """Concrete random batch with the dry-run schema (smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    out: Batch = {}
+    for name, (shp, dt) in batch_schema(cfg, shape, batch).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(dt, jnp.integer):
+            hi = cfg.vocab_size if name in ("tokens", "targets") else (
+                DC.N_CLASSES if name == "labels" else 2)
+            out[name] = jax.random.randint(sub, shp, 0, max(hi, 2), dt)
+        else:
+            out[name] = (jax.random.normal(sub, shp, jnp.float32)
+                         * 0.02).astype(dt)
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       batch: int | None = None) -> Any:
+    """Abstract decode state for a decode cell (cache filled to seq_len).
+
+    The dry-run cells model *aligned* batch decode: the fill position is a
+    scalar, so the cache update lowers to an in-place dynamic-update-slice
+    (the per-slot (B,) variant exists for the continuous-batching engine).
+    """
+    model = build(cfg)
+    if model.init_state_fn is None:
+        raise ValueError(f"{cfg.name} has no decode path")
+    B = batch if batch is not None else shape.global_batch
+    state = model.init_state_fn(B, shape.seq_len)
+    if hasattr(state, "length"):
+        state = state._replace(
+            length=jax.ShapeDtypeStruct((), jnp.int32))
+    return state

@@ -1,0 +1,172 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone + one *shared* attention block.
+
+Per [arXiv:2411.15242]: the backbone is a stack of Mamba-2 layers; every
+``hybrid_group``-th layer, a single shared transformer block (attention+MLP,
+one set of weights reused at every insertion point) runs on the concatenated
+hidden state, with a per-insertion LoRA-style projection to de-share
+capacity.  We implement the shared block with per-site input norms (the
+cheap de-sharing variant) — weights are shared, norms are not.
+
+Sub-quadratic in sequence (SSM backbone + attention over the full sequence
+only every k layers at shared weights) → ``long_500k`` decode runs with a
+sliding-window attention cache (window = cfg attention context, here the
+KV cache holds the last ``window`` tokens).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.params import P, stack_layers
+
+Params = Any
+
+ATTN_WINDOW = 4096   # shared-attention sliding window for long-context decode
+
+
+class HybridState(NamedTuple):
+    ssm: S.SSMState          # (L, ...) stacked mamba states
+    attn_k: jax.Array        # (n_shared, B, W, K, hd) sliding-window caches
+    attn_v: jax.Array
+    length: jax.Array        # (B,)
+
+
+def n_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_group if cfg.hybrid_group else 0
+
+
+def hybrid_spec(cfg: ModelConfig) -> Params:
+    n_sites = n_shared_sites(cfg)
+    return {
+        "embed": L.embed_spec(cfg),
+        "ssm_blocks": stack_layers(
+            lambda: {"ln": L.rmsnorm_spec(cfg.d_model),
+                     "ssm": S.ssm_spec(cfg)}, cfg.n_layers),
+        # ONE shared attention+MLP block (the zamba trick)
+        "shared": {"attn": L.attention_spec(cfg),
+                   "mlp": L.mlp_spec(cfg)},
+        # per-site input norms (de-sharing)
+        "site_ln": stack_layers(
+            lambda: L.rmsnorm_spec(cfg.d_model), max(n_sites, 1)),
+        "site_ln_mlp": stack_layers(
+            lambda: L.rmsnorm_spec(cfg.d_model), max(n_sites, 1)),
+        "ln_f": L.rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _shared_block(params: Params, x: jax.Array, site: int, cfg: ModelConfig,
+                  run: RunConfig, positions, kv_cache=None, cache_len=None):
+    ln = jax.tree.map(lambda a: a[site], params["site_ln"])
+    ln2 = jax.tree.map(lambda a: a[site], params["site_ln_mlp"])
+    h, new_cache = L.attention_apply(
+        params["shared"]["attn"], L.rmsnorm_apply(ln, x, cfg.norm_eps),
+        cfg, run, positions=positions, kv_cache=kv_cache, cache_len=cache_len)
+    x = x + h
+    x = x + L.mlp_apply(params["shared"]["mlp"],
+                        L.rmsnorm_apply(ln2, x, cfg.norm_eps), cfg, run)
+    return x, new_cache
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            run: RunConfig) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits, aux). Python loop over shared sites,
+    scan over the ssm layers between them (keeps one while per segment)."""
+    B, Sq = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, run)
+    positions = jnp.arange(Sq)
+    k = cfg.hybrid_group if cfg.hybrid_group else cfg.n_layers
+    n_sites = n_shared_sites(cfg)
+
+    from repro.distributed.sharding import constrain
+
+    def ssm_body(h, layer_p):
+        h = constrain(h, run, "batch", "seq", None)
+        y, _ = S.ssm_apply(layer_p["ssm"],
+                           L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
+                           cfg, run)
+        return constrain(h + y, run, "batch", "seq", None), None
+
+    done = 0
+    site = 0
+    while done < cfg.n_layers:
+        seg = min(k, cfg.n_layers - done)
+        seg_params = jax.tree.map(lambda a: a[done:done + seg],
+                                  params["ssm_blocks"])
+        x, _ = jax.lax.scan(ssm_body, x, seg_params)
+        done += seg
+        if site < n_sites and done < cfg.n_layers or (
+                site < n_sites and done == cfg.n_layers and n_sites * k == cfg.n_layers):
+            x, _ = _shared_block(params, x, site, cfg, run, positions)
+            site += 1
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_state(cfg: ModelConfig, batch: int, window: int = ATTN_WINDOW,
+               dtype=jnp.bfloat16) -> HybridState:
+    n_sites = max(n_shared_sites(cfg), 1)
+    kv_shape = (n_sites, batch, window, cfg.n_kv_heads, cfg.head_dim)
+    return HybridState(
+        ssm=S.ssm_state_spec(cfg, batch, jnp.float32),
+        attn_k=jax.ShapeDtypeStruct(kv_shape, dtype),
+        attn_v=jax.ShapeDtypeStruct(kv_shape, dtype),
+        length=jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+def decode_step(params: Params, tokens: jax.Array, state: HybridState,
+                cfg: ModelConfig, run: RunConfig
+                ) -> tuple[jax.Array, HybridState]:
+    """One-token decode: O(1) SSM steps + sliding-window shared attention."""
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, run)
+    k = cfg.hybrid_group if cfg.hybrid_group else cfg.n_layers
+    n_sites = n_shared_sites(cfg)
+    window = state.attn_k.shape[2]
+    # sliding-window write slot + RoPE position clamped inside the window
+    slot = state.length % window
+    pos = jnp.minimum(state.length, window - 1)
+    pos2d = pos[:, None] if pos.ndim else pos.reshape(1, 1)
+
+    def ssm_body(carry, inp):
+        h = carry
+        layer_p, st = inp
+        y, new_st = S.ssm_apply(
+            layer_p["ssm"], L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
+            cfg, run, state=st)
+        return h + y, new_st
+
+    new_ssm_parts = []
+    new_k = state.attn_k
+    new_v = state.attn_v
+    done = 0
+    site = 0
+    while done < cfg.n_layers:
+        seg = min(k, cfg.n_layers - done)
+        seg_params = jax.tree.map(lambda a: a[done:done + seg],
+                                  params["ssm_blocks"])
+        seg_state = jax.tree.map(lambda a: a[done:done + seg], state.ssm)
+        x, seg_new = jax.lax.scan(ssm_body, x, (seg_params, seg_state))
+        new_ssm_parts.append(seg_new)
+        done += seg
+        if site < n_sites and (done < cfg.n_layers
+                               or n_sites * k == cfg.n_layers):
+            cache = (new_k[site], new_v[site])
+            x, upd = _shared_block(params, x, site, cfg, run,
+                                   positions=pos2d,
+                                   kv_cache=cache, cache_len=slot)
+            new_k = new_k.at[site].set(upd[0])
+            new_v = new_v.at[site].set(upd[1])
+            site += 1
+    new_ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm_parts)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, HybridState(ssm=new_ssm, attn_k=new_k, attn_v=new_v,
+                               length=state.length + 1)

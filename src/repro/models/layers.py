@@ -1,0 +1,300 @@
+"""Core transformer layers: norms, RoPE, GQA attention, gated MLPs.
+
+Pure-functional: ``*_spec(cfg)`` returns a :class:`repro.models.params.P`
+tree; ``*_apply(params, x, ...)`` is the forward.  All matmul compute runs in
+``RunConfig.compute_dtype`` (AMP O1/O2 → bf16 on the MXU); softmax and norms
+accumulate in fp32 (paper §IV-C: numerics-preserving mixed precision).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.params import P
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Params:
+    return {"scale": P((d,), ("embed",), "ones")}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+            ).astype(dt)
+
+
+def layernorm_spec(d: int) -> Params:
+    return {"scale": P((d,), ("embed",), "ones"),
+            "bias": P((d,), ("embed",), "zeros")}
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE over the trailing head_dim of ``x`` (..., S, H, hd)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+def attention_spec(cfg: ModelConfig) -> Params:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": P((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": P((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+          k_len: jax.Array | None = None,
+          stat_dtype=jnp.float32) -> jax.Array:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, K, G, hd) — query heads grouped by their KV head.
+    k/v: (B, Sk, K, hd).  Softmax statistics in ``stat_dtype`` (fp32 under
+    the paper's O1 semantics; bf16 under the aggressive O2-style policy).
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    scores = scores.astype(stat_dtype)
+    neg = jnp.asarray(-1e30, stat_dtype)    # representable in bf16 too
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]                 # (Sq, Sk)
+        scores = jnp.where(mask[None, None, None], scores, neg)
+    if k_len is not None:                                       # decode: cache fill
+        if k_len.ndim == 0:                                     # aligned batch
+            valid = k_pos < k_len                               # (Sk,)
+            scores = jnp.where(valid[None, None, None, None], scores, neg)
+        else:
+            valid = k_pos[None, :] < k_len[:, None]             # (B, Sk)
+            scores = jnp.where(valid[:, None, None, None], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, causal, chunk: int,
+                  k_len=None, stat_dtype=jnp.float32) -> jax.Array:
+    """Query-chunked attention: O(chunk x Sk) live scores (32k-prefill path).
+
+    The chunk body is rematerialized (``jax.checkpoint``): only chunk
+    *outputs* (B, chunk, K, G, hd) survive to the backward pass, and the
+    (chunk x Sk) score/softmax matrices are recomputed — the same
+    save-nothing-recompute-scores policy a flash-attention kernel implements
+    in VMEM on real TPU hardware.
+    """
+    B, Sq, K, G, hd = q.shape
+    n = Sq // chunk
+    qs = q.reshape(B, n, chunk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ps = q_pos.reshape(n, chunk)
+
+    @jax.checkpoint
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        return None, _sdpa(qc, k, v, pc, k_pos, causal, k_len, stat_dtype)
+
+    _, out = jax.lax.scan(body, None, (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, hd)
+
+
+def attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, run: RunConfig,
+                    positions: jax.Array | None = None,
+                    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_len: jax.Array | None = None,
+                    causal: bool = True,
+                    memory: jax.Array | None = None,
+                    ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """GQA attention with optional KV cache (decode) or cross-attn memory.
+
+    Returns (output, updated_kv_cache).
+    """
+    with jax.named_scope("attention"):
+        return _attention_apply(p, x, cfg, run, positions, kv_cache,
+                                cache_len, causal, memory)
+
+
+def _attention_apply(p, x, cfg, run, positions=None, kv_cache=None,
+                     cache_len=None, causal=True, memory=None):
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    cd = run.compute_dtype
+    sd = jnp.float32 if run.softmax_f32 else cd     # softmax-stat dtype
+    xc = x.astype(cd)
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(cd))
+    kv_src = xc if memory is None else memory.astype(cd)
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(cd))
+
+    if memory is None:                                 # self-attn: RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k_pos_new = positions
+        k = rope(k, k_pos_new, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:                           # decode: append to cache
+        ck, cv = kv_cache
+        idx = cache_len if cache_len is not None else jnp.zeros(
+            (B,), jnp.int32)
+        # in-place update at the fill position (donated buffers alias, so
+        # traffic is O(slice), not O(cache) — the one-hot blend formulation
+        # rewrites the whole cache every token).  A scalar position (aligned
+        # batch decode, the serve_step cell) lowers to dynamic-update-slice;
+        # per-slot positions (continuous batching) lower to a scatter.
+        if S == 1 and idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        elif S == 1:
+            bidx = jnp.arange(B)
+            ck = ck.at[bidx, idx].set(k[:, 0].astype(ck.dtype),
+                                      unique_indices=True, mode="drop")
+            cv = cv.at[bidx, idx].set(v[:, 0].astype(cv.dtype),
+                                      unique_indices=True, mode="drop")
+        else:                                          # multi-token append
+            oh = jax.nn.one_hot(idx, ck.shape[1], dtype=ck.dtype)
+            ck = ck * (1 - oh[:, :, None, None]) \
+                + oh[:, :, None, None] * k.astype(ck.dtype)
+            cv = cv * (1 - oh[:, :, None, None]) \
+                + oh[:, :, None, None] * v.astype(cv.dtype)
+        new_cache = (ck, cv)
+        k_full, v_full = ck, cv
+        k_positions = jnp.arange(ck.shape[1])
+        k_len = idx + 1
+        qg = q.reshape(B, S, K, G, hd)
+        out = _sdpa(qg, k_full.astype(cd), v_full.astype(cd),
+                    positions, k_positions, causal=False, k_len=k_len,
+                    stat_dtype=sd)
+    else:
+        qg = q.reshape(B, S, K, G, hd)
+        k_positions = (jnp.arange(k.shape[1]) if memory is not None
+                       else positions)
+        if run.attn_impl == "flash" and memory is None and causal:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention_gqa(qg, k, v)
+        elif (run.attn_impl == "chunked" and S > run.attn_chunk
+                and S % run.attn_chunk == 0):
+            out = _sdpa_chunked(qg, k, v, positions, k_positions,
+                                causal and memory is None, run.attn_chunk,
+                                stat_dtype=sd)
+        else:
+            out = _sdpa(qg, k, v, positions, k_positions,
+                        causal and memory is None, stat_dtype=sd)
+
+    out = out.reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y.astype(x.dtype), new_cache
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16, n_layers: int | None = None):
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return (jax.ShapeDtypeStruct(shape, dtype),
+            jax.ShapeDtypeStruct(shape, dtype))
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": P((D, F), ("embed", "ffn")),
+                "w_up": P((D, F), ("embed", "ffn")),
+                "w_down": P((F, D), ("ffn", "embed"))}
+    return {"w_up": P((D, F), ("embed", "ffn")),
+            "w_down": P((F, D), ("ffn", "embed"))}
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+              run: RunConfig) -> jax.Array:
+    with jax.named_scope("mlp"):
+        return _mlp_apply(p, x, cfg, run)
+
+
+def _mlp_apply(p, x, cfg, run):
+    cd = run.compute_dtype
+    xc = x.astype(cd)
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cd))
+        u = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cd))
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cd))
+        h = jax.nn.gelu(h) if cfg.act == "gelu" else jnp.square(jax.nn.relu(h))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_spec(cfg: ModelConfig) -> Params:
+    V = cfg.vocab_padded
+    out = {"tokens": P((V, cfg.d_model), ("vocab", "embed"), "small_normal")}
+    if not cfg.tie_embeddings:
+        out["unembed"] = P((cfg.d_model, V), ("embed", "vocab"))
+    return out
+
+
+def embed_apply(p: Params, tokens: jax.Array, run: RunConfig) -> jax.Array:
+    from repro.distributed.sharding import constrain
+    x = p["tokens"].astype(run.compute_dtype)[tokens]
+    return constrain(x, run, "batch", "seq", None)
+
+
+def unembed_apply(p: Params, x: jax.Array, run: RunConfig) -> jax.Array:
+    from repro.distributed.sharding import constrain
+    with jax.named_scope("logits"):
+        cd = run.compute_dtype
+        w = p.get("unembed")
+        if w is None:
+            w = p["tokens"].T
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(cd), w.astype(cd))
+        return constrain(logits, run, "batch", "seq", "vocab")

@@ -1,0 +1,140 @@
+"""Top-k routed mixture-of-experts block (GShard-style, EP-shardable).
+
+Dispatch is **grouped** (GShard §3.2): the batch dim is the group dim, so
+every dispatch-side tensor carries the data sharding — nothing materializes
+at global-token size.  Within a group, dispatch is sort-based (dropless up
+to a per-group capacity factor): tokens are ranked inside their expert via
+a sorted cumulative count — no (S, E) one-hot matrices, which matters at
+kimi-k2 scale (384 experts).  Expert weights carry a leading ``experts``
+axis that the sharding rules map to the ``model`` mesh axis (expert
+parallelism); the group→expert buffer reshard is the MoE all-to-all.
+
+Shapes (per group g of S tokens, capacity C = S·K/E·cf):
+  route:    (S, E) fp32 logits → top-k (S, K)
+  dispatch: buf (E, C, D)  [vmapped over groups → (G, E, C, D), G=data,
+                            E=model]
+  combine:  gather back (S·K, D) → weighted scatter-add → (S, D)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.params import P
+
+Params = Any
+
+
+def moe_spec(cfg: ModelConfig) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    spec = {
+        "router": P((D, E), ("embed", "experts"), "small_normal"),
+        "w_gate": P((E, D, F), ("experts", "embed", "expert_ffn")),
+        "w_up": P((E, D, F), ("experts", "embed", "expert_ffn")),
+        "w_down": P((E, F, D), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.moe_shared_ff:
+        from repro.models.layers import mlp_spec
+        spec["shared"] = mlp_spec(cfg, cfg.moe_shared_ff)
+    return spec
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    cap = int(tokens_per_group * cfg.experts_per_token / cfg.n_experts
+              * cfg.capacity_factor)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def _route_group(xg: jax.Array, router: jax.Array, cfg: ModelConfig,
+                 capacity: int):
+    """Route one group. xg (S, D) fp32 → slot/token/gate arrays (S·K,)."""
+    S = xg.shape[0]
+    E, K = cfg.n_experts, cfg.experts_per_token
+    logits = xg @ router                                       # (S, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balance aux loss terms (Switch eq. 4), averaged over groups later
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E,
+                                 dtype=jnp.float32), axis=0)   # (E,)
+
+    flat_e = expert_ids.reshape(-1)                            # (S*K,)
+    flat_t = jnp.repeat(jnp.arange(S), K)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(S * K) - starts[se]                      # pos in expert
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + rank, E * capacity)  # overflow row
+    return slot, st, jnp.where(keep, sg, 0.0), me, ce
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+              run: RunConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss). x: (B, S, D), B = groups."""
+    with jax.named_scope("moe"):
+        return _moe_apply(p, x, cfg, run)
+
+
+def _moe_apply(p, x, cfg, run):
+    from repro.distributed.sharding import constrain
+
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    cd = run.compute_dtype
+    C = _capacity(S, cfg)
+
+    # --- routing (fp32 for numerics), vmapped over groups -------------------
+    slots, st, sg, me, ce = jax.vmap(
+        lambda xg: _route_group(xg.astype(jnp.float32),
+                                p["router"].astype(jnp.float32), cfg, C))(x)
+    aux = E * jnp.sum(jnp.mean(me, 0) * jnp.mean(ce, 0))
+
+    # --- dispatch: per-group scatter into the (E, C) expert buffer ----------
+    xg = jnp.take_along_axis(x.astype(cd), st[..., None], axis=1)  # (B,S*K,D)
+    if run.moe_combine == "a2a":
+        # shard the sorted-token dim over model: each model rank holds the
+        # slice it will scatter into its expert shard (a2a-shaped movement
+        # instead of materializing full xg on every rank)
+        xg = constrain(xg, run, "batch", "seq", None)
+    buf = jnp.zeros((B, E * C + 1, D), cd)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slots, xg)
+    buf = buf[:, :-1].reshape(B, E, C, D)
+    # group axis stays on data; expert axis moves to model — the all-to-all
+    buf = constrain(buf, run, "batch", "experts", None, None)
+
+    # --- expert FFN (weights sharded on E → EP) ------------------------------
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(cd))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cd))
+    out_buf = constrain(out_buf, run, "batch", "experts", None, None)
+
+    # --- combine: gather back, gate-weight, scatter-add over tokens ---------
+    flat = out_buf.reshape(B, E * C, D)
+    if run.moe_combine == "reshard":
+        # one explicit bf16 reshard of the (E·C, D) buffer back to batch
+        # sharding; the combine gather then runs shard-locally — replaces
+        # XLA's f32 (S·K, D) masked-gather all-reduce over the model axis
+        flat = constrain(flat, run, "batch", None, None)
+    flat = jnp.concatenate([flat, jnp.zeros((B, 1, D), cd)], axis=1)
+    gathered = jnp.take_along_axis(flat, slots[..., None], axis=1)  # (B,S*K,D)
+    if run.moe_combine == "a2a":
+        gathered = constrain(gathered, run, "batch", "seq", None)
+    contrib = gathered * sg[..., None].astype(cd)
+    y = jax.vmap(lambda t, c: jnp.zeros((S, D), cd).at[t].add(c))(st, contrib)
+
+    if "shared" in p:
+        from repro.models.layers import mlp_apply
+        y = y + mlp_apply(p["shared"], x, cfg, run).astype(cd)
+
+    return y.astype(x.dtype), aux.astype(jnp.float32)

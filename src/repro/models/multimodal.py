@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (per task spec).
+
+``phi-3-vision`` and ``seamless-m4t`` specify the transformer *backbone*;
+the CLIP patch encoder / speech frame encoder are stubs whose job is to
+provide correctly-shaped precomputed embeddings:
+
+* VLM:   ``patch_embeds``  (B, n_patches, d_model)  — prepended to tokens
+* audio: ``frame_embeds``  (B, n_frames, d_model)   — encoder input
+
+``input_specs`` below returns ShapeDtypeStructs (dry-run); ``synthetic_*``
+return concrete arrays for the smoke tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# phi-3-vision: 336px CLIP-L/14 → (336/14)^2 = 576 patches per crop; a single
+# crop for the assigned shapes.  seamless: 16 kHz fbank, ~10 frames/s context
+# window; we expose n_prefix_embeds from the config.
+
+
+def prefix_spec(cfg: ModelConfig, batch: int,
+                dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.n_prefix_embeds, cfg.d_model),
+                                dtype)
+
+
+def synthetic_prefix(cfg: ModelConfig, batch: int, seed: int = 0,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.normal(k, (batch, cfg.n_prefix_embeds, cfg.d_model),
+                              jnp.float32) * 0.02).astype(dtype)

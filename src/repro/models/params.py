@@ -1,0 +1,80 @@
+"""Parameter specification utilities.
+
+A model is described by a pytree of :class:`P` specs (shape + logical axis
+names + init scale).  From the same spec tree we derive:
+
+* concrete initialized parameters (``init``),
+* abstract ``ShapeDtypeStruct`` stand-ins for the dry-run (``abstract``),
+* ``NamedSharding`` trees via the logical-axis rules in
+  ``repro.distributed.sharding``.
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+``vocab, embed, heads, kv_heads, head_dim, ffn, experts, expert_ffn,
+layers, ssm_inner, ssm_state, conv, batch, seq`` — ``None`` = replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"       # normal | zeros | ones | small_normal
+    scale: float | None = None  # None → 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(fn: Callable[[P], Any], specs: Any) -> Any:
+    return jax.tree.map(fn, specs, is_leaf=_leaf_is_spec)
+
+
+def abstract(specs: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return tree_map_specs(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), specs)
+
+
+def init(rng: jax.Array, specs: Any, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_leaf_is_spec)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+
+    def one(p: P, key: jax.Array) -> jax.Array:
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        # fan-in = every dim but the last (correct for convs (k,k,cin,cout)
+        # and depthwise (W,C); conservative for multi-out-dim projections)
+        fan_in = int(math.prod(p.shape[:-1])) if len(p.shape) > 1 else 1
+        scale = p.scale if p.scale is not None else 1.0 / math.sqrt(fan_in)
+        if p.init == "small_normal":
+            scale = 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+
+    return treedef.unflatten(one(p, k) for p, k in zip(leaves, keys))
+
+
+def count(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_leaf_is_spec)
+    return sum(int(math.prod(p.shape)) for p in leaves)
+
+
+def stack_layers(spec_fn: Callable[[], Any], n: int) -> Any:
+    """Prepend a scanned ``layers`` axis to every param in a layer spec."""
+    base = spec_fn()
+    return tree_map_specs(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), p.init, p.scale), base)

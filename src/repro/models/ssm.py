@@ -1,0 +1,264 @@
+"""Mamba-2 (SSD, state-space duality) sequence mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD dual form: the sequence is split into
+chunks of length Q; within a chunk the recurrence is evaluated as a masked
+quadratic form (MXU-friendly), across chunks a linear recurrence carries the
+(H, P, N) state.  Decoding is the O(1) recurrent step on a persistent state
+— which is what makes the ``long_500k`` cell feasible for this family.
+
+y_t = C_t^T s_t,   s_t = a_t * s_{t-1} + dt_t * B_t x_t^T,
+a_t = exp(-exp(A_log) * dt_t)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.params import P
+from repro.models.layers import rmsnorm_apply, rmsnorm_spec
+
+Params = Any
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, W-1, d_conv_in)  rolling conv buffer
+    ssd: jax.Array     # (B, H, P, N)         recurrent state
+
+
+def ssm_spec(cfg: ModelConfig) -> Params:
+    D, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    conv_ch = di + 2 * G * N
+    return {
+        "in_proj": P((D, 2 * di + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": P((W, conv_ch), (None, "ssm_inner")),
+        "conv_b": P((conv_ch,), ("ssm_inner",), "zeros"),
+        "A_log": P((H,), (None,), "zeros"),
+        "D_skip": P((H,), (None,), "ones"),
+        "dt_bias": P((H,), (None,), "zeros"),
+        "norm": rmsnorm_spec(di),
+        "out_proj": P((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(z: jax.Array, cfg: ModelConfig):
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    zg, xi, Bc, Cc, dt = jnp.split(
+        z, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return zg, xi, Bc, Cc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, x: (B, S, C), w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def ssd_chunked(xh: jax.Array, a_log_dt: jax.Array, B_: jax.Array,
+                C_: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) head-split inputs (already scaled by dt)
+    a_log_dt: (B, S, H) per-step log-decay (negative)
+    B_, C_: (B, S, N) (groups already broadcast)
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    x_c = xh.reshape(Bsz, nc, chunk, H, Pd)
+    a_c = a_log_dt.reshape(Bsz, nc, chunk, H)
+    B_c = B_.reshape(Bsz, nc, chunk, N)
+    C_c = C_.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(a_c, axis=2)                        # (B, nc, Q, H)
+    total = cum[:, :, -1, :]                             # (B, nc, H)
+
+    # intra-chunk quadratic form: M[i,j] = exp(cum_i - cum_j) * (C_i . B_j), i>=j
+    # mask BEFORE exp: for j > i the exponent is positive and unbounded, and
+    # exp-then-mask sends inf into the backward pass (observed NaN grads)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    scores = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)     # (B,nc,Q,Q)
+    M = (scores[..., None] * decay).astype(xh.dtype)     # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, x_c)
+
+    # chunk-final states: sum_j exp(total - cum_j) B_j x_j
+    w_state = jnp.exp(total[:, :, None, :] - cum)        # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        B_c, w_state.astype(xh.dtype), x_c)
+
+    # inter-chunk recurrence over chunk states
+    s0 = (jnp.zeros((Bsz, H, Pd, N), xh.dtype)
+          if init_state is None else init_state.astype(xh.dtype))
+
+    def step(s, inp):
+        st, tot = inp
+        s_new = s * jnp.exp(tot)[:, :, None, None].astype(xh.dtype) + st
+        return s_new, s
+
+    (s_final, prev_states) = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   total.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # state BEFORE chunk c
+
+    # inter-chunk contribution: y_i += C_i . (exp(cum_i) * s_prev)
+    w_in = jnp.exp(cum).astype(xh.dtype)                 # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", C_c, prev_states, w_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y, s_final
+
+
+def ssm_apply(p: Params, x: jax.Array, cfg: ModelConfig, run: RunConfig,
+              state: SSMState | None = None,
+              ) -> tuple[jax.Array, SSMState | None]:
+    """Mamba-2 block. state=None → chunked prefill; else single-step decode."""
+    with jax.named_scope("ssm"):
+        return _ssm_apply(p, x, cfg, run, state)
+
+
+def _ssm_apply(p, x, cfg, run, state=None):
+    B, S, D = x.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    cd = run.compute_dtype
+    z = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    zg, xi, Bc, Cc, dt_raw = _split_proj(z, cfg)
+
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)     # (B, S, di+2GN)
+    new_state = None
+    if state is None:
+        conv = _causal_conv(conv_in, p["conv_w"].astype(cd),
+                            p["conv_b"].astype(cd))
+    else:
+        buf = jnp.concatenate([state.conv.astype(cd), conv_in], axis=1)
+        conv = _causal_conv(buf, p["conv_w"].astype(cd),
+                            p["conv_b"].astype(cd))[:, -S:]
+        new_conv = buf[:, -(cfg.ssm_conv_width - 1):]
+    conv = jax.nn.silu(conv)
+    xi, Bc, Cc = jnp.split(conv, [di, di + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    a_log_dt = A * dt                                          # (B,S,H) ≤ 0
+
+    xh = xi.reshape(B, S, H, Pd) * dt[..., None].astype(cd)
+    Bn = Bc.reshape(B, S, G, N)[:, :, 0, :]                    # G=1 path
+    Cn = Cc.reshape(B, S, G, N)[:, :, 0, :]
+
+    if state is None:
+        if run.ssd_impl == "kernel":
+            from repro.kernels.ssd_scan.ops import ssd_scan_model_layout
+            y = ssd_scan_model_layout(
+                xh.astype(jnp.float32), a_log_dt,
+                Bn.astype(jnp.float32), Cn.astype(jnp.float32),
+                min(cfg.ssm_chunk, S)).astype(cd)
+        else:
+            y, _final = ssd_chunked(xh, a_log_dt, Bn, Cn,
+                                    min(cfg.ssm_chunk, S))
+    else:
+        a = jnp.exp(a_log_dt[:, 0]).astype(cd)                 # (B,H)
+        s = state.ssd.astype(cd) * a[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhpn", Bn[:, 0].astype(cd), xh[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", Cn[:, 0].astype(cd), s)[:, None]
+        y = y.reshape(B, S, H, Pd)
+        new_state = SSMState(conv=new_conv.astype(state.conv.dtype),
+                             ssd=s.astype(state.ssd.dtype))
+
+    y = y + xh * p["D_skip"].astype(cd)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(zg), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(cd), p["out_proj"].astype(cd))
+    return out.astype(x.dtype), new_state
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                   n_layers: int | None = None):
+    L = n_layers if n_layers is not None else cfg.n_layers
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return SSMState(
+        conv=jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        ssd=jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    )
+
+
+# --------------------------------------------------------------------------
+# Full Mamba-2 LM (scanned layer stack; mirrors transformer.py's API)
+# --------------------------------------------------------------------------
+
+def lm_spec(cfg: ModelConfig) -> Params:
+    from repro.models import layers as L
+    from repro.models.params import stack_layers
+    return {
+        "embed": L.embed_spec(cfg),
+        "blocks": stack_layers(
+            lambda: {"ln": rmsnorm_spec(cfg.d_model), "ssm": ssm_spec(cfg)},
+            cfg.n_layers),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            run: RunConfig) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (chunked SSD) → (logits, aux=0)."""
+    from repro.models import layers as L
+
+    x = L.embed_apply(params["embed"], tokens, run)
+    from repro.distributed.sharding import constrain
+
+    def body(h, layer_p):
+        h = constrain(h, run, "batch", "seq", None)
+        y, _ = ssm_apply(layer_p["ssm"],
+                         rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
+                         cfg, run)
+        return constrain(h + y, run, "batch", "seq", None), None
+
+    if run.remat == "full":
+        body = jax.checkpoint(body)
+    elif run.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    return ssm_state_spec(cfg, batch, dtype)
+
+
+def decode_step(params: Params, tokens: jax.Array, state: SSMState,
+                cfg: ModelConfig, run: RunConfig
+                ) -> tuple[jax.Array, SSMState]:
+    """One-token decode: O(1) recurrent step per layer. tokens (B, 1)."""
+    from repro.models import layers as L
+
+    x = L.embed_apply(params["embed"], tokens, run)
+
+    def body(h, inp):
+        layer_p, st = inp
+        y, new_st = ssm_apply(layer_p["ssm"],
+                              rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
+                              cfg, run, state=st)
+        return h + y, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, new_state

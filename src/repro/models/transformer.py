@@ -1,0 +1,196 @@
+"""Decoder-only LM (dense / MoE blocks) and encoder-decoder transformer.
+
+Layers are *scanned*: per-layer params carry a leading ``layers`` axis and the
+forward runs ``jax.lax.scan`` over it, so the compiled HLO has one ``while``
+whose ``known_trip_count`` the HLO analyzer multiplies out.  This keeps
+compile time flat in depth (88-layer mistral-large lowers as fast as 2
+layers) — essential for the 40-cell dry-run.
+
+Three entry points per model:
+
+* ``forward(params, tokens)``          — logits (train / prefill)
+* ``decode_step(params, tokens, cache)`` — one token with a KV cache
+* ``init_cache(...)``                  — abstract cache spec for the dry-run
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.params import P, stack_layers, tree_map_specs
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# Block spec / apply
+# --------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig, cross_attn: bool = False) -> Params:
+    spec: dict[str, Any] = {
+        "ln_attn": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln_mlp": L.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        spec["moe"] = M.moe_spec(cfg)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg)
+    if cross_attn:
+        spec["ln_cross"] = L.rmsnorm_spec(cfg.d_model)
+        spec["cross"] = L.attention_spec(cfg)
+    return spec
+
+
+def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, run: RunConfig,
+                positions: jax.Array,
+                kv_cache=None, cache_len=None, memory=None,
+                cross_cache=None):
+    """One transformer block. Returns (x, new_kv_cache, aux_loss)."""
+    h, new_cache = L.attention_apply(
+        p["attn"], L.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps), cfg, run,
+        positions=positions, kv_cache=kv_cache, cache_len=cache_len)
+    x = x + h
+    if memory is not None:
+        hc, _ = L.attention_apply(
+            p["cross"], L.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps),
+            cfg, run, positions=positions, causal=False, memory=memory)
+        x = x + hc
+    aux = jnp.zeros((), jnp.float32)
+    y = L.rmsnorm_apply(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = M.moe_apply(p["moe"], y, cfg, run)
+    else:
+        y = L.mlp_apply(p["mlp"], y, cfg, run)
+    return x + y, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Decoder-only LM
+# --------------------------------------------------------------------------
+
+def lm_spec(cfg: ModelConfig) -> Params:
+    cross = cfg.family in ("encdec", "audio")
+    spec: dict[str, Any] = {
+        "embed": L.embed_spec(cfg),
+        "blocks": stack_layers(lambda: block_spec(cfg, cross_attn=cross),
+                               cfg.n_layers),
+        "ln_f": L.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.n_encoder_layers:
+        spec["enc_blocks"] = stack_layers(lambda: block_spec(cfg),
+                                          cfg.n_encoder_layers)
+        spec["enc_ln_f"] = L.rmsnorm_spec(cfg.d_model)
+    return spec
+
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "full":
+        return jax.checkpoint(fn)
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _scan_blocks(blocks: Params, x: jax.Array, cfg: ModelConfig,
+                 run: RunConfig, positions: jax.Array,
+                 memory: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """scan over the stacked layer axis; returns (x, summed aux loss)."""
+    from repro.distributed.sharding import constrain
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h = constrain(h, run, "batch", "seq", None)
+        h2, _, a = block_apply(layer_p, h, cfg, run, positions,
+                               memory=memory)
+        h2 = constrain(h2, run, "batch", "seq", None)
+        return (h2, aux + a), None
+
+    body = _remat(body, run)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def encode(params: Params, embeds: jax.Array, cfg: ModelConfig,
+           run: RunConfig) -> jax.Array:
+    """Encoder stack over precomputed embeddings (audio/enc-dec)."""
+    S = embeds.shape[1]
+    x, _ = _scan_blocks(params["enc_blocks"], embeds.astype(run.compute_dtype),
+                        cfg, run, jnp.arange(S))
+    return L.rmsnorm_apply(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            run: RunConfig, memory: jax.Array | None = None,
+            prefix_embeds: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward → (logits, aux_loss).
+
+    ``prefix_embeds`` (B, P, D): VLM patch / audio frame embeddings prepended
+    to the token embeddings (the modality-stub path).
+    """
+    x = L.embed_apply(params["embed"], tokens, run)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    x, aux = _scan_blocks(params["blocks"], x, cfg, run, jnp.arange(S),
+                          memory=memory)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# Decode (one token, scanned KV cache)
+# --------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """KV caches stacked over layers: (L, B, S_max, K, hd) each."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array     # (B,) current fill
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> DecodeState:
+    k, v = L.kv_cache_spec(cfg, batch, max_len, dtype)
+    return DecodeState(k=k, v=v,
+                       length=jax.ShapeDtypeStruct((batch,), jnp.int32))
+
+
+def decode_step(params: Params, tokens: jax.Array, state: DecodeState,
+                cfg: ModelConfig, run: RunConfig,
+                memory: jax.Array | None = None
+                ) -> tuple[jax.Array, DecodeState]:
+    """One new token per sequence against the KV cache. tokens: (B, 1).
+
+    ``state.length`` may be per-sequence (B,) — continuous batching — or a
+    scalar (aligned batch decode; lowers to dynamic-update-slice).
+    """
+    x = L.embed_apply(params["embed"], tokens, run)
+    positions = (state.length[:, None] if state.length.ndim
+                 else state.length.reshape(1, 1))     # RoPE position(s)
+
+    def body(carry, inp):
+        h = carry
+        layer_p, ck, cv = inp
+        (h2, new_cache, _) = block_apply(
+            layer_p, h, cfg, run, positions=positions,
+            kv_cache=(ck, cv), cache_len=state.length, memory=memory)
+        return h2, new_cache
+
+    x, caches = jax.lax.scan(body, x, (params["blocks"], state.k, state.v))
+    new_k, new_v = caches
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, run)
+    return logits, DecodeState(k=new_k, v=new_v, length=state.length + 1)

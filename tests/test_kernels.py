@@ -1,0 +1,144 @@
+"""Per-kernel validation (task spec c): shape/dtype sweeps, interpret-mode
+Pallas kernels vs pure-jnp ref.py oracles, analytic FLOP/byte counters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ert import bandwidth as BW
+from repro.kernels.ert import flops as FL
+from repro.kernels.ert import gemm as GM
+from repro.kernels.ert import ref as ERT_REF
+from repro.kernels.flash_attention import kernel as FA
+from repro.kernels.flash_attention import ops as FA_OPS
+from repro.kernels.flash_attention import ref as FA_REF
+from repro.kernels.ssd_scan import kernel as SSD
+from repro.kernels.ssd_scan import ops as SSD_OPS
+from repro.kernels.ssd_scan import ref as SSD_REF
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestERT:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n_iters,ilp", [(4, 1), (16, 2), (8, 4)])
+    def test_fma_chain_matches_ref(self, dtype, n_iters, ilp):
+        x = (jax.random.normal(KEY, (FL.BLOCK * 2,), jnp.float32)
+             .astype(dtype))
+        out = FL.fma_chain(x, n_iters, ilp)
+        ref = ERT_REF.fma_chain_ref(x, n_iters, ilp)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_triad_matches_ref(self, dtype):
+        a = jnp.arange(BW.BLOCK * 2, dtype=jnp.float32).astype(dtype)
+        b = (a * 0.25).astype(dtype)
+        np.testing.assert_allclose(
+            np.asarray(BW.triad(a, b), np.float32),
+            np.asarray(ERT_REF.triad_ref(a, b), np.float32), rtol=1e-2)
+
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 512),
+                                       (512, 256, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_gemm_matches_ref(self, shape, dtype):
+        m, k, n = shape
+        ka, kb = jax.random.split(KEY)
+        a = (jax.random.normal(ka, (m, k), jnp.float32) * 0.1).astype(dtype)
+        b = (jax.random.normal(kb, (k, n), jnp.float32) * 0.1).astype(dtype)
+        out = GM.matmul(a, b, block_m=128, block_n=128, block_k=128,
+                        out_dtype=jnp.float32)
+        ref = ERT_REF.matmul_ref(a, b, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_flop_counters(self):
+        assert FL.fma_flops(10, 4, 2) == (2 * 4 * 2 + 2) * 10
+        assert BW.triad_bytes(10, 4) == 120
+        assert GM.gemm_flops(4, 5, 6) == 240
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dims", [
+        (2, 128, 128, 64, 64, 64),
+        (1, 256, 256, 128, 128, 64),
+        (4, 64, 64, 32, 64, 32),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, dims, dtype, causal):
+        bh, sq, sk, hd, bq, bk = dims
+        ks = jax.random.split(KEY, 3)
+        q = (jax.random.normal(ks[0], (bh, sq, hd)) * 0.5).astype(dtype)
+        k = (jax.random.normal(ks[1], (bh, sk, hd)) * 0.5).astype(dtype)
+        v = (jax.random.normal(ks[2], (bh, sk, hd)) * 0.5).astype(dtype)
+        out = FA.flash_attention(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk)
+        ref = FA_REF.attention_ref(q, k, v, causal=causal)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_gqa_wrapper_matches_model_sdpa(self):
+        from repro.models.layers import _sdpa
+        B, S, K, G, hd = 2, 64, 2, 3, 32
+        ks = jax.random.split(KEY, 3)
+        qg = jax.random.normal(ks[0], (B, S, K, G, hd))
+        k = jax.random.normal(ks[1], (B, S, K, hd))
+        v = jax.random.normal(ks[2], (B, S, K, hd))
+        pos = jnp.arange(S)
+        out = FA_OPS.flash_attention_gqa(qg, k, v)
+        ref = _sdpa(qg, k, v, pos, pos, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_analytic_traffic_is_linear_in_s(self):
+        assert FA.hbm_bytes(1, 2 * 1024, 2 * 1024, 128) == \
+            2 * FA.hbm_bytes(1, 1024, 1024, 128)
+        # while math FLOPs stay quadratic
+        assert FA.flops(1, 2048, 2048, 128) == 4 * FA.flops(1, 1024, 1024,
+                                                            128)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("dims", [
+        (2, 3, 256, 16, 8, 64),
+        (1, 2, 128, 32, 16, 32),
+        (2, 1, 64, 8, 8, 64),
+    ])
+    def test_matches_ref(self, dims):
+        B, H, S, P, N, Q = dims
+        ks = jax.random.split(KEY, 4)
+        xdt = jax.random.normal(ks[0], (B, H, S, P)) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[1], (B, H, S))) * 0.1
+        Bc = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        Cc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+        out = SSD.ssd_scan(xdt, a, Bc, Cc, chunk=Q)
+        ref = SSD_REF.ssd_ref(xdt, a, Bc, Cc, chunk=Q)
+        scale = float(jnp.max(jnp.abs(ref)))
+        assert float(jnp.max(jnp.abs(out - ref))) / scale < 1e-4
+
+    def test_model_layout_wrapper(self):
+        B, S, H, P, N, Q = 1, 64, 2, 8, 4, 32
+        ks = jax.random.split(KEY, 4)
+        xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+        a = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.1
+        Bc = jax.random.normal(ks[2], (B, S, N)) * 0.5
+        Cc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+        from repro.models.ssm import ssd_chunked
+        y_kernel = SSD_OPS.ssd_scan_model_layout(xh, a, Bc, Cc, Q)
+        y_model, _ = ssd_chunked(xh, a, Bc, Cc, Q)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_kernel_traffic_linear_vs_quadratic_flops(self):
+        b, h, p, n, q = 1, 1, 16, 8, 64
+        assert SSD.hbm_bytes(b, h, 2 * 256, p, n) == \
+            2 * SSD.hbm_bytes(b, h, 256, p, n)
+        assert SSD.flops(b, h, 512, p, n, q) == 2 * SSD.flops(b, h, 256,
+                                                              p, n, q)

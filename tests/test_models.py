@@ -1,0 +1,221 @@
+"""Per-architecture smoke tests (task spec f): every assigned arch builds a
+REDUCED config, runs one forward/train/decode step on CPU, asserts shapes +
+finiteness; plus family-specific math checks (SSD chunk invariance, DeepCAM
+impl equivalence, GQA causality).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.models import build, synthetic_batch
+from repro.models.params import count, init
+
+RUN = RunConfig(amp="O1")
+TRAIN = ShapeSpec("t", 64, 2, "train")
+DECODE = ShapeSpec("d", 64, 2, "decode")
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_train_step_finite(self, arch, rng):
+        cfg = get_smoke(arch)
+        model = build(cfg)
+        params = init(rng, model.spec)
+        batch = synthetic_batch(cfg, TRAIN, 2)
+        loss, metrics = jax.jit(
+            lambda p, b: model.loss_fn(p, b, RUN))(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+        # random init ≈ uniform over the vocab
+        import math
+        assert abs(float(metrics["ce"]) - math.log(cfg.vocab_size)) < 1.0
+
+    def test_grads_finite_and_nonzero(self, arch, rng):
+        cfg = get_smoke(arch)
+        model = build(cfg)
+        params = init(rng, model.spec)
+        batch = synthetic_batch(cfg, TRAIN, 2)
+        grads = jax.jit(jax.grad(
+            lambda p: model.loss_fn(p, batch, RUN)[0]))(params)
+        leaves = jax.tree.leaves(grads)
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+        total = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+        assert total > 0
+
+    def test_decode_step(self, arch, rng):
+        cfg = get_smoke(arch)
+        model = build(cfg)
+        if model.decode_fn is None:
+            pytest.skip("no decode path (cnn)")
+        params = init(rng, model.spec)
+        batch = synthetic_batch(cfg, DECODE, 2)
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             model.init_state_fn(2, 32))
+        logits, new_state = jax.jit(
+            lambda p, b, s: model.decode_fn(p, b, s, RUN))(
+            params, batch, state)
+        assert logits.shape[:2] == (2, 1)
+        assert logits.shape[-1] >= cfg.vocab_size   # padded vocab
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_full_config_param_count(self, arch):
+        """Analytic param count lands in the family's published ballpark."""
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        expect = {
+            "minitron-4b": (3e9, 5e9),
+            "mistral-large-123b": (115e9, 130e9),
+            "granite-8b": (7e9, 9e9),
+            "glm4-9b": (8.5e9, 10.5e9),
+            "zamba2-1.2b": (0.9e9, 1.5e9),
+            "phi-3-vision-4.2b": (3.3e9, 4.5e9),    # backbone (stub frontend)
+            "seamless-m4t-large-v2": (1.3e9, 2.5e9),
+            "mamba2-1.3b": (1.1e9, 1.5e9),
+            "granite-moe-1b-a400m": (1.0e9, 1.7e9),
+            "kimi-k2-1t-a32b": (0.9e12, 1.15e12),
+        }[arch]
+        assert expect[0] <= n <= expect[1], f"{arch}: {n/1e9:.2f}B"
+
+    def test_smoke_spec_counts_match_init(self, arch, rng):
+        cfg = get_smoke(arch)
+        model = build(cfg)
+        params = init(rng, model.spec)
+        n_init = sum(x.size for x in jax.tree.leaves(params))
+        assert n_init == count(model.spec)
+
+
+class TestMoE:
+    def test_active_params_less_than_total(self):
+        # granite-moe routes 8-of-32 experts (~1/3 active incl. backbone);
+        # kimi routes 8-of-384 (~1/30 active)
+        cfg = get_config("granite-moe-1b-a400m")
+        assert cfg.active_param_count() < cfg.param_count() / 2
+        cfg = get_config("kimi-k2-1t-a32b")
+        assert cfg.active_param_count() < cfg.param_count() / 10
+
+    def test_capacity_drops_are_bounded(self, rng):
+        """With cf=1.25, most tokens route; output is not mostly zeros."""
+        cfg = get_smoke("granite-moe-1b-a400m")
+        from repro.models.moe import moe_apply, moe_spec
+        spec = moe_spec(cfg)
+        params = init(rng, spec)
+        x = jax.random.normal(rng, (2, 64, cfg.d_model), jnp.float32)
+        y, aux = moe_apply(params, x, cfg, RUN)
+        assert y.shape == x.shape
+        nonzero = float(jnp.mean(jnp.any(jnp.abs(y) > 0, axis=-1)))
+        assert nonzero > 0.5
+        assert float(aux) > 0.5  # load-balance loss ~1 at uniform routing
+
+
+class TestSSD:
+    def test_chunk_invariance(self, rng):
+        """SSD output must not depend on the chunk size (math property)."""
+        from repro.models.ssm import ssd_chunked
+        B, S, H, P, N = 2, 128, 3, 8, 4
+        ks = jax.random.split(rng, 4)
+        xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.3
+        a = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.1
+        Bc = jax.random.normal(ks[2], (B, S, N)) * 0.3
+        Cc = jax.random.normal(ks[3], (B, S, N)) * 0.3
+        y32, _ = ssd_chunked(xh, a, Bc, Cc, 32)
+        y128, _ = ssd_chunked(xh, a, Bc, Cc, 128)
+        assert float(jnp.max(jnp.abs(y32 - y128))) < 1e-4
+
+    def test_prefill_matches_stepwise_decode(self, rng):
+        """Chunked (dual) form ≡ recurrent stepwise form (SSD duality)."""
+        cfg = get_smoke("mamba2-1.3b")
+        from repro.models import ssm as SM
+        model = build(cfg)
+        params = init(rng, model.spec)
+        run = RunConfig(amp="O0")      # fp32 for a tight comparison
+        T = 32
+        tokens = jax.random.randint(rng, (1, T), 0, cfg.vocab_size)
+        full_logits, _ = SM.forward(params, tokens, cfg, run)
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             SM.init_state(cfg, 1))
+        outs = []
+        for t in range(T):
+            lg, state = SM.decode_step(params, tokens[:, t:t + 1], state,
+                                       cfg, run)
+            outs.append(lg[:, 0])
+        step_logits = jnp.stack(outs, axis=1)
+        err = float(jnp.max(jnp.abs(step_logits - full_logits)))
+        assert err < 5e-2, err
+
+
+class TestTransformerDecode:
+    def test_decode_matches_prefill(self, rng):
+        """Greedy continuation from a cache ≡ teacher-forced forward."""
+        cfg = get_smoke("glm4-9b")
+        from repro.models import transformer as TR
+        model = build(cfg)
+        params = init(rng, model.spec)
+        run = RunConfig(amp="O0")
+        T = 12
+        tokens = jax.random.randint(rng, (1, T), 0, cfg.vocab_size)
+        full_logits, _ = TR.forward(params, tokens, cfg, run)
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             TR.init_cache(cfg, 1, 32, jnp.float32))
+        for t in range(T):
+            lg, state = TR.decode_step(params, tokens[:, t:t + 1], state,
+                                       cfg, run)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, -1])))
+        assert err < 5e-3, err
+
+    def test_causality(self, rng):
+        """Changing a future token must not affect earlier logits."""
+        cfg = get_smoke("granite-8b")
+        from repro.models import transformer as TR
+        model = build(cfg)
+        params = init(rng, model.spec)
+        run = RunConfig(amp="O0")
+        t1 = jax.random.randint(rng, (1, 16), 0, cfg.vocab_size)
+        t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab_size)
+        l1, _ = TR.forward(params, t1, cfg, run)
+        l2, _ = TR.forward(params, t2, cfg, run)
+        assert float(jnp.max(jnp.abs(l1[:, :-1] - l2[:, :-1]))) < 1e-5
+
+
+class TestDeepCAM:
+    def test_impls_agree(self, rng):
+        """reference and fused lowerings compute the same math (paper §III-B:
+        the TF-vs-PyTorch comparison holds the math fixed)."""
+        from repro.models.deepcam import deepcam_forward, deepcam_spec
+        spec = deepcam_spec(width=8)
+        params = init(rng, spec)
+        run = RunConfig(amp="O0")
+        x = jax.random.normal(rng, (1, 32, 48, 16), jnp.float32)
+        y_ref = deepcam_forward(params, x, run, impl="reference")
+        y_fused = deepcam_forward(params, x, run, impl="fused")
+        assert y_ref.shape == (1, 32, 48, 3)
+        assert float(jnp.max(jnp.abs(y_ref - y_fused))) < 1e-4
+
+    def test_impls_differ_in_traffic_mix_under_amp(self, rng):
+        """The paper's TF-vs-PyTorch point: two lowerings of the same math
+        produce different kernel/traffic mixes.  Under O1 the two impls'
+        norm-precision choices change the internal (VMEM-level) traffic
+        even where XLA fuses them to the same kernel count."""
+        from repro.core import analyze_compiled
+        from repro.models.deepcam import deepcam_forward, deepcam_spec
+        spec = deepcam_spec(width=8)
+        params = init(rng, spec)
+        run = RunConfig(amp="O1")
+        x = jax.ShapeDtypeStruct((1, 32, 48, 16), jnp.float32)
+        pa = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                          params)
+        vmem = {}
+        for impl in ("reference", "fused"):
+            comp = jax.jit(lambda p, im: deepcam_forward(
+                p, im, run, impl=impl)).lower(pa, x).compile()
+            an = analyze_compiled(comp)
+            vmem[impl] = an.total_vmem_bytes
+        ratio = vmem["fused"] / vmem["reference"]
+        assert abs(ratio - 1.0) > 0.05, vmem

@@ -1,0 +1,146 @@
+"""Property-based tests (hypothesis) on system invariants (task spec c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hlo_analysis import _COLL_MULT, DTYPE_BYTES, Shape
+from repro.core.machine import TPU_V5E
+from repro.core.roofline import attainable
+from repro.distributed.compression import (compress, compress_with_feedback,
+                                           decompress)
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+class TestQuantization:
+    @given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                    max_size=64))
+    @settings(**SETTINGS)
+    def test_roundtrip_error_bound(self, vals):
+        """|x - deq(q(x))| ≤ scale/2 elementwise (symmetric int8 quant)."""
+        g = jnp.asarray(vals, jnp.float32)
+        q, scale = compress(g)
+        err = np.abs(np.asarray(g - decompress(q, scale)))
+        assert np.all(err <= float(scale) / 2 + 1e-6)
+
+    @given(st.integers(1, 40))
+    @settings(**SETTINGS)
+    def test_error_feedback_is_lossless_on_constant_stream(self, steps):
+        """With EF, the *accumulated* transmitted signal converges to the
+        accumulated true signal (error does not grow with T)."""
+        g = jnp.asarray([0.3, -0.007, 1.7], jnp.float32)
+        residual = jnp.zeros_like(g)
+        sent = jnp.zeros_like(g)
+        for _ in range(steps):
+            q, scale, residual = compress_with_feedback(g, residual)
+            sent = sent + decompress(q, scale)
+        # total error equals the residual left in the buffer — bounded
+        total_err = np.abs(np.asarray(sent + residual - g * steps))
+        assert np.all(total_err < 1e-4)
+
+    @given(st.floats(1e-6, 1e6))
+    @settings(**SETTINGS)
+    def test_scale_invariance(self, s):
+        g = jnp.asarray([0.1, -0.9, 0.5], jnp.float32)
+        q1, _ = compress(g)
+        q2, _ = compress(g * s)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+class TestRooflineMath:
+    @given(st.floats(1e-3, 1e6), st.sampled_from(["bf16", "f32", "int8"]))
+    @settings(**SETTINGS)
+    def test_attainable_never_exceeds_either_roof(self, ai, cls):
+        a = attainable(ai, TPU_V5E, cls)
+        assert a <= TPU_V5E.peak_for(cls) + 1e-6
+        assert a <= TPU_V5E.hbm.bytes_per_s * ai * (1 + 1e-9)
+
+    @given(st.floats(1e-3, 1e5), st.floats(1.01, 10.0))
+    @settings(**SETTINGS)
+    def test_attainable_monotone_in_ai(self, ai, mult):
+        assert attainable(ai * mult, TPU_V5E) >= attainable(ai, TPU_V5E)
+
+    @given(st.integers(2, 4096))
+    @settings(**SETTINGS)
+    def test_collective_multipliers_bounded(self, n):
+        """Ring algorithm wire factors: AR < 2, AG/RS/A2A < 1."""
+        assert 0 < _COLL_MULT["all-gather"](n) < 1
+        assert 0 < _COLL_MULT["reduce-scatter"](n) < 1
+        assert 1 <= _COLL_MULT["all-reduce"](n) < 2
+        assert _COLL_MULT["all-reduce"](n) == (
+            _COLL_MULT["all-gather"](n) + _COLL_MULT["reduce-scatter"](n))
+
+
+class TestShapes:
+    @given(st.sampled_from(sorted(DTYPE_BYTES)),
+           st.lists(st.integers(1, 64), max_size=4))
+    @settings(**SETTINGS)
+    def test_shape_bytes(self, dtype, dims):
+        s = Shape(dtype, tuple(dims))
+        assert s.bytes == int(np.prod(dims or [1])) * DTYPE_BYTES[dtype]
+
+
+class TestLossForms:
+    @given(st.integers(2, 6), st.integers(3, 17))
+    @settings(max_examples=20, deadline=None)
+    def test_onehot_ce_equals_gather_ce(self, b, v):
+        """The partition-friendly one-hot CE == take_along_axis CE."""
+        from repro.models.api import lm_loss
+        key = jax.random.PRNGKey(b * 31 + v)
+        logits = jax.random.normal(key, (b, 4, v), jnp.float32)
+        targets = jax.random.randint(key, (b, 4), 0, v)
+        loss, _ = lm_loss(logits, targets, jnp.zeros(()))
+        lg = jax.nn.log_softmax(logits, -1)
+        ref = -jnp.mean(jnp.take_along_axis(
+            lg, targets[..., None], axis=-1))
+        assert abs(float(loss) - float(ref)) < 1e-4
+
+    @given(st.integers(1, 5))
+    @settings(max_examples=10, deadline=None)
+    def test_vocab_padding_invariance(self, pad_mult):
+        """Masked padded columns must not change the loss."""
+        from repro.models.api import lm_loss
+        key = jax.random.PRNGKey(pad_mult)
+        v, vpad = 11, 11 + 3 * pad_mult
+        logits = jax.random.normal(key, (2, 4, v), jnp.float32)
+        padded = jnp.concatenate(
+            [logits, jax.random.normal(key, (2, 4, vpad - v)) * 10], axis=-1)
+        targets = jax.random.randint(key, (2, 4), 0, v)
+        l1, _ = lm_loss(logits, targets, jnp.zeros(()))
+        l2, _ = lm_loss(padded, targets, jnp.zeros(()), vocab=v)
+        assert abs(float(l1) - float(l2)) < 1e-5
+
+
+class TestRoPE:
+    @given(st.integers(0, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_rope_inner_products_are_shift_invariant(self, shift):
+        """<rope(q,i), rope(k,j)> depends only on i-j (relative encoding)."""
+        from repro.models.layers import rope
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (1, 1, 1, 32), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+        def ip(i, j):
+            qi = rope(q, jnp.array([i]), 10_000.0)
+            kj = rope(k, jnp.array([j]), 10_000.0)
+            return float(jnp.sum(qi * kj))
+        assert abs(ip(3 + shift, shift) - ip(3, 0)) < 1e-3
+
+
+class TestDataDeterminism:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_token_stream_pure_in_step(self, step):
+        from repro.configs.base import ShapeSpec
+        from repro.configs.registry import get_smoke
+        from repro.data.pipeline import TokenStream
+        cfg = get_smoke("glm4-9b")
+        s = TokenStream(cfg, ShapeSpec("t", 16, 2, "train"), 2, seed=1)
+        b1, b2 = s(step), s(step)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k])
+        if step > 0:
+            b0 = s(step - 1)
+            assert any(not np.array_equal(b0[k], b1[k]) for k in b1)

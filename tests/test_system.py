@@ -1,0 +1,140 @@
+"""End-to-end system tests: the full measure→characterize→report loop of
+the paper on a real (small) training run, plus data pipeline glue.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.core import (analyze_compiled, ascii_roofline, get_machine,
+                        kernel_table, profile_fn, terms_table, zero_ai_table)
+from repro.data.pipeline import ClimateStream, Prefetcher, TokenStream
+from repro.models import build, input_specs, synthetic_batch
+from repro.models.params import abstract, init
+from repro.train.step import init_state, make_phases, make_train_step
+
+
+class TestPaperLoop:
+    """Profile fwd / bwd / opt of a model and produce every report artifact
+    — the complete §II-B + §IV workflow on CPU."""
+
+    def test_phase_profiling_and_reports(self):
+        cfg = get_smoke("granite-8b")
+        model = build(cfg)
+        run = RunConfig(amp="O1")
+        machine = get_machine("tpu-v5e")
+        shape = ShapeSpec("t", 32, 4, "train")
+        phases = make_phases(model, run)
+        params_abs = abstract(model.spec)
+        batch_abs = input_specs(cfg, shape)
+        batch_abs = {k: jax.ShapeDtypeStruct((4, *v.shape[1:]), v.dtype)
+                     for k, v in batch_abs.items()}
+        grads_abs = params_abs
+
+        from repro.train.optim import optimizer_init
+        opt_abs = jax.eval_shape(
+            lambda: optimizer_init(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             params_abs), run))
+
+        results = {}
+        results["fwd"] = profile_fn(phases["fwd"],
+                                    args=(params_abs, batch_abs), name="fwd")
+        results["bwd"] = profile_fn(phases["bwd"],
+                                    args=(params_abs, batch_abs), name="bwd")
+        results["opt"] = profile_fn(
+            phases["opt"], args=(params_abs, grads_abs, opt_abs), name="opt")
+
+        # paper structure: bwd ≈ 2× fwd FLOPs; optimizer is low-AI streaming
+        f_fwd = results["fwd"].analysis.total_flops
+        f_bwd = results["bwd"].analysis.total_flops
+        assert 1.5 < f_bwd / f_fwd < 3.5
+        opt = results["opt"]
+        assert opt.terms.dominant == "memory"           # paper Fig 7
+        assert opt.analysis.total_flops < f_fwd / 10
+
+        # report artifacts render
+        chart = ascii_roofline(results["bwd"].analysis.kernels, machine,
+                               title="bwd")
+        assert "FLOP/s" in chart and len(chart.splitlines()) > 20
+        table = kernel_table(results["bwd"].analysis, machine)
+        assert "kernel" in table
+        census = {k: v.analysis.zero_ai_census() for k, v in results.items()}
+        zt = zero_ai_table(census)
+        assert "zero-AI" in zt
+        tt = terms_table(results)
+        assert "dominant" in tt
+
+    def test_zero_ai_fraction_in_paper_range(self):
+        """Table III: a large share of kernels perform no FLOPs."""
+        cfg = get_smoke("minitron-4b")
+        model = build(cfg)
+        run = RunConfig(amp="O1")     # AMP introduces convert kernels
+        shape = ShapeSpec("t", 32, 4, "train")
+        step = make_train_step(model, run)
+        state_abs = jax.eval_shape(
+            lambda: init_state(model, run, jax.random.PRNGKey(0)))
+        batch_abs = {k: jax.ShapeDtypeStruct((4, *v.shape[1:]), v.dtype)
+                     for k, v in input_specs(cfg, shape).items()}
+        compiled = jax.jit(step).lower(state_abs, batch_abs).compile()
+        an = analyze_compiled(compiled)
+        census = an.zero_ai_census()
+        z, n = census["zero-AI"][0], census["non zero-AI"][0]
+        frac = z / (z + n)
+        assert 0.15 < frac < 0.75, frac     # paper observes 40-55%
+
+
+class TestDataPipeline:
+    def test_token_stream_schema_matches_model(self):
+        cfg = get_smoke("phi-3-vision-4.2b")
+        shape = ShapeSpec("t", 64, 2, "train")
+        stream = TokenStream(cfg, shape, 2)
+        model = build(cfg)
+        params = init(jax.random.PRNGKey(0), model.spec)
+        batch = {k: jnp.asarray(v) for k, v in stream(0).items()}
+        loss, _ = model.loss_fn(params, batch, RunConfig())
+        assert bool(jnp.isfinite(loss))
+
+    def test_climate_stream_labels(self):
+        s = ClimateStream((32, 48), 2)
+        b = s(0)
+        assert b["images"].shape == (2, 32, 48, 16)
+        assert set(np.unique(b["labels"])) <= {0, 1, 2}
+
+    def test_prefetcher_orders_and_closes(self):
+        stream = TokenStream(get_smoke("glm4-9b"),
+                             ShapeSpec("t", 16, 2, "train"), 2)
+        pf = Prefetcher(stream, start_step=5, prefetch=2)
+        try:
+            s1, b1 = pf.next()
+            s2, b2 = pf.next()
+            assert (s1, s2) == (5, 6)
+            np.testing.assert_array_equal(b1["tokens"], stream(5)["tokens"])
+        finally:
+            pf.close()
+
+
+class TestEndToEnd:
+    def test_train_profile_serve_loop(self):
+        """Train a few steps, profile the trained step, serve from it."""
+        from repro.serve.engine import Engine, Request
+        from repro.train.trainer import Trainer
+        cfg = get_smoke("granite-moe-1b-a400m")
+        model = build(cfg)
+        run = RunConfig(amp="O1")
+        shape = ShapeSpec("t", 32, 4, "train")
+        stream = TokenStream(cfg, shape, 4)
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(model, run, stream, ckpt_dir=d, ckpt_every=5,
+                         lr=1e-3)
+            rep = tr.fit(10, log_every=0, log=lambda *_: None)
+            assert rep.losses[-1] < rep.losses[0]
+            eng = Engine(cfg, run, tr.state.params, n_slots=2, max_len=48)
+            reqs = [Request(i, np.arange(1 + i, 5 + i) % cfg.vocab_size,
+                            max_new=2) for i in range(3)]
+            eng.serve(reqs)
+            assert all(r.done for r in reqs)

@@ -1,0 +1,220 @@
+"""Training substrate tests: step semantics, AMP/loss scaling, optimizers,
+microbatch equivalence, checkpoint/restart, trainer fault-tolerance hooks.
+"""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.distributed import amp
+from repro.models import build, synthetic_batch
+from repro.models.params import init
+from repro.train import optim
+from repro.train.step import TrainState, init_state, make_train_step
+
+SHAPE = ShapeSpec("t", 32, 8, "train")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("granite-8b")
+    model = build(cfg)
+    batch = synthetic_batch(cfg, SHAPE, 8)
+    return cfg, model, batch
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, setup):
+        _, model, batch = setup
+        run = RunConfig(amp="O1")
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, run, lr=1e-3))
+        losses = []
+        for _ in range(8):
+            state, metrics = step(state, batch)   # same batch → must overfit
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.1
+        assert int(state.step) == 8
+
+    def test_microbatch_equivalence(self, setup):
+        """mb=1 and mb=4 produce (nearly) the same update in fp32."""
+        _, model, batch = setup
+        s1 = init_state(model, RunConfig(amp="O0"), jax.random.PRNGKey(0))
+        s4 = init_state(model, RunConfig(amp="O0"), jax.random.PRNGKey(0))
+        st1 = jax.jit(make_train_step(model, RunConfig(amp="O0"), lr=1e-3))
+        st4 = jax.jit(make_train_step(
+            model, RunConfig(amp="O0", microbatches=4), lr=1e-3))
+        s1, m1 = st1(s1, batch)
+        s4, m4 = st4(s4, batch)
+        assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-4
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         s1.params, s4.params)
+        assert max(jax.tree.leaves(d)) < 2e-4
+
+    def test_o2_runs(self, setup):
+        _, model, batch = setup
+        run = RunConfig(amp="O2", microbatches=2)
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        assert jax.tree.leaves(state.params)[0].dtype == jnp.bfloat16
+        step = jax.jit(make_train_step(model, run))
+        state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+
+
+class TestLossScaling:
+    def test_overflow_shrinks_and_skips(self):
+        s = amp.DynLossScale.init(1024.0)
+        grads = {"w": jnp.array([jnp.inf, 1.0])}
+        g2, s2, finite = amp.unscale_and_update(grads, s)
+        assert not bool(finite)
+        assert float(s2.scale) == 512.0
+
+    def test_growth_after_interval(self):
+        s = amp.DynLossScale(jnp.float32(8.0), jnp.int32(1))
+        grads = {"w": jnp.ones(3)}
+        _, s2, finite = amp.unscale_and_update(grads, s, growth_interval=2)
+        assert bool(finite)
+        assert float(s2.scale) == 16.0
+        assert int(s2.good_steps) == 0
+
+    def test_unscale_divides(self):
+        s = amp.DynLossScale.init(64.0)
+        grads = {"w": jnp.full(3, 64.0)}
+        g2, _, _ = amp.unscale_and_update(grads, s)
+        np.testing.assert_allclose(np.asarray(g2["w"]), 1.0)
+
+
+class TestOptimizers:
+    def _quad_losses(self, run, steps=60):
+        target = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        state = optim.optimizer_init(params, run)
+        losses = []
+        for _ in range(steps):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state = optim.optimizer_update(g, state, params, run,
+                                                   lr=5e-2)
+            losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+        return losses
+
+    def test_adamw_converges(self):
+        losses = self._quad_losses(RunConfig(optimizer="adamw"))
+        assert losses[-1] < 0.1 * losses[0]
+
+    def test_adafactor_converges(self):
+        losses = self._quad_losses(RunConfig(optimizer="adafactor"))
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_blocked_update_matches_unblocked(self):
+        """lax.map-blocked AdamW must equal the plain elementwise update."""
+        L, D, F = 4, 16, 32
+        key = jax.random.PRNGKey(3)
+        params = {"w": jax.random.normal(key, (L, D, F))}
+        grads = {"w": jax.random.normal(key, (L, D, F)) * 0.1}
+        run = RunConfig()
+        st = optim.adamw_init(params, run)
+        p1, _ = optim.adamw_update(grads, st, params)
+        old = optim._BLOCK_BYTES
+        try:
+            optim._BLOCK_BYTES = 0        # force blocking
+            p2, _ = optim.adamw_update(grads, st, params)
+        finally:
+            optim._BLOCK_BYTES = old
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                                   rtol=1e-6)
+
+    def test_adafactor_factored_memory(self):
+        """Second moment is O(rows+cols), not O(rows*cols)."""
+        params = {"w": jnp.zeros((64, 128))}
+        st = optim.adafactor_init(params, RunConfig(optimizer="adafactor"))
+        assert st.vr["w"].shape == (64,)
+        assert st.vc["w"].shape == (128,)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_latest(self, setup):
+        from repro.checkpoint import checkpointer as ckpt
+        _, model, _ = setup
+        run = RunConfig()
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 3, state, {"step": 3})
+            ckpt.save(d, 7, state, {"step": 7})
+            assert ckpt.latest_step(d) == 7
+            like = jax.eval_shape(lambda: init_state(
+                model, run, jax.random.PRNGKey(0)))
+            restored, meta = ckpt.restore(d, like)
+            assert meta["step"] == 7
+            a = jax.tree.leaves(state.params)[0]
+            b = jax.tree.leaves(restored.params)[0]
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_gc_keeps_three(self, setup):
+        from repro.checkpoint import checkpointer as ckpt
+        _, model, _ = setup
+        state = init_state(model, RunConfig(), jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            for s in range(5):
+                ckpt.save(d, s, state)
+            dirs = [x for x in os.listdir(d) if x.startswith("step_")]
+            assert len(dirs) == 3
+            assert ckpt.latest_step(d) == 4
+
+    def test_async_checkpointer(self, setup):
+        from repro.checkpoint.checkpointer import AsyncCheckpointer, restore
+        _, model, _ = setup
+        state = init_state(model, RunConfig(), jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            ac = AsyncCheckpointer()
+            ac.save(d, 1, state, {"step": 1})
+            ac.wait()
+            like = jax.eval_shape(lambda: init_state(
+                model, RunConfig(), jax.random.PRNGKey(0)))
+            _, meta = restore(d, like)
+            assert meta["step"] == 1
+
+    def test_dtype_cast_on_restore(self):
+        """Restore casts to the target tree's dtypes (elastic re-precision)."""
+        from repro.checkpoint import checkpointer as ckpt
+        tree = {"w": jnp.ones((4, 4), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 0, tree)
+            like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+            out, _ = ckpt.restore(d, like)
+            assert out["w"].dtype == jnp.bfloat16
+
+
+class TestTrainerFaultTolerance:
+    def test_restart_resumes_exactly(self, setup):
+        from repro.data.pipeline import TokenStream
+        from repro.train.trainer import Trainer
+        cfg, model, _ = setup
+        run = RunConfig(amp="O1")
+        stream = TokenStream(cfg, SHAPE, batch=8)
+        with tempfile.TemporaryDirectory() as d:
+            t1 = Trainer(model, run, stream, ckpt_dir=d, ckpt_every=4,
+                         lr=1e-3)
+            t1.fit(8, log_every=0, log=lambda *_: None)
+            t2 = Trainer(model, run, stream, ckpt_dir=d, ckpt_every=4,
+                         lr=1e-3)
+            assert t2.report.resumed_from == 8
+            assert int(t2.state.step) == 8
+            rep = t2.fit(10, log_every=0, log=lambda *_: None)
+            assert rep.steps == 2          # only the remaining steps run
+
+    def test_straggler_detection_fields(self, setup):
+        from repro.train.trainer import Trainer
+        cfg, model, _ = setup
+        stream = lambda step: synthetic_batch(cfg, SHAPE, 8, seed=step)
+        t = Trainer(model, RunConfig(), stream, straggler_factor=1e-9)
+        rep = t.fit(3, log_every=0, log=lambda *_: None)
+        # with an absurd factor every post-warmup step is a "straggler"
+        assert len(rep.stragglers) >= 1
+        step_idx, dt, ewma = rep.stragglers[0]
+        assert dt > 0 and ewma > 0
