@@ -1,7 +1,8 @@
 """Benchmark driver: one module per paper table/figure (+ ops benches).
 
-``PYTHONPATH=src python -m benchmarks.run [--only <name>]``
-prints ``name,us_per_call,derived`` CSV rows.
+``PYTHONPATH=src python -m benchmarks.run [--only <name>] [--list]``
+prints ``name,us_per_call,derived`` CSV rows; exits non-zero if any
+suite raised.
 """
 
 from __future__ import annotations
@@ -23,13 +24,20 @@ SUITES = (
     "roofline_table",    # task-spec SRoofline (40-cell dry-run table)
     "kernel_bench",      # SPerf kernel-vs-XLA structural terms
     "train_throughput",  # operational: measured smoke train steps
+    "trace_smoke",       # repro.trace: record→store→compare loop
 )
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=SUITES)
+    ap.add_argument("--list", action="store_true",
+                    help="print suite names and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in SUITES:
+            print(name)
+        return 0
     failures = 0
     for name in SUITES:
         if args.only and name != args.only:

@@ -2,8 +2,11 @@
 
 Bring any jax function + abstract inputs; get the paper's full analysis
 (hierarchical roofline chart, per-kernel table, zero-AI census, three-term
-bound).  Shown here on a custom MLP-mixer-ish toy model nobody in the
-repo has ever seen — the point is the tool is model-agnostic.
+bound) — then the *measured* half: ``measure=True`` executes the same
+compiled executable and ``repro.trace`` folds the wall time back into the
+chart (achieved GFLOP/s, %-of-roofline per kernel).  Shown here on a
+custom MLP-mixer-ish toy model nobody in the repo has ever seen — the
+point is the tool is model-agnostic.
 
 Run: ``PYTHONPATH=src python examples/profile_your_model.py``
 """
@@ -11,8 +14,9 @@ Run: ``PYTHONPATH=src python examples/profile_your_model.py``
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ascii_roofline, get_machine, kernel_table,
-                        profile_fn)
+from repro.core import (achieved_table, ascii_roofline, get_machine,
+                        kernel_table, profile_fn)
+from repro.trace import achieved_points, measurement_from_profile
 
 
 def my_model(params, x):
@@ -48,3 +52,25 @@ print(kernel_table(res.analysis, machine, top_n=8))
 print("\nwhat to do next: the dominant term above is the bottleneck; "
       "kernels hugging the HBM diagonal want fusion (zero-AI census: "
       f"{res.analysis.zero_ai_census()})")
+
+# ---- the measured path: same compiled executable, now executed -----------
+# Off-TPU the honest ceiling set is the host's, so the achieved/%-roofline
+# numbers are reported against the cpu-host machine model; on real TPU
+# hardware pass the TPU spec and the identical code times the device.
+host = get_machine("cpu-host")
+res_m = profile_fn(loss_and_grad, args=(params, x), name="my_model/bwd",
+                   machine=host, measure=True, measure_iters=5,
+                   measure_warmup=2)
+m = measurement_from_profile(res_m, host)
+print()
+print(m.summary())
+print()
+print(achieved_table({"my_model": {"bwd": m}}))
+print()
+print(ascii_roofline(res_m.analysis.kernels, host,
+                     title="my model, bwd (measured)",
+                     achieved=achieved_points(m.kernels)))
+print("\npersist it: repro.trace.TraceStore('trace.jsonl').append("
+      "repro.trace.record_from_phases('my_model', {'bwd': m}, "
+      "machine='cpu-host')) — then `python -m repro.trace compare` "
+      "flags regressions across commits")

@@ -23,8 +23,9 @@ from repro.core.roofline import (  # noqa: F401
     model_flops_ratio, roofline_terms,
 )
 from repro.core.profiler import (  # noqa: F401
-    ProfileResult, profile_compiled, profile_fn, profile_phases, time_fn,
+    ProfileResult, compile_fn, materialize_args, profile_compiled,
+    profile_fn, profile_phases, time_compiled, time_fn,
 )
 from repro.core.report import (  # noqa: F401
-    ascii_roofline, kernel_table, terms_table, zero_ai_table,
+    achieved_table, ascii_roofline, kernel_table, terms_table, zero_ai_table,
 )

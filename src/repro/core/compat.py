@@ -1,0 +1,60 @@
+"""Shims over jax API drift (ambient mesh, shard_map).
+
+The codebase targets the current jax mesh API (``jax.set_mesh`` as the
+ambient-mesh context plus ``jax.sharding.get_abstract_mesh`` to read it
+back), but pinned containers may carry an older jax where the ambient mesh
+is the legacy thread-resources context (``with mesh:``) and ``shard_map``
+still lives under ``jax.experimental``.  Everything in the repo that needs
+an ambient mesh goes through these helpers so both generations work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.6
+    from jax import shard_map           # noqa: F401
+except ImportError:                     # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` with a psum(1) fallback for older jax."""
+    get = getattr(jax.lax, "axis_size", None)
+    if get is not None:
+        return get(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def mesh_context(mesh: jax.sharding.Mesh):
+    """Context manager that makes ``mesh`` ambient for lowering/constraints.
+
+    ``with mesh_context(m): jitted.lower(...)`` replaces the newer
+    ``with jax.set_mesh(m):`` — on older jax a ``Mesh`` is its own context
+    manager (the thread-resources env that ``with_sharding_constraint``
+    resolves bare ``PartitionSpec``s against).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def ambient_mesh():
+    """The mesh sharding constraints would resolve against, or ``None``.
+
+    Mirrors ``jax.sharding.get_abstract_mesh()`` on current jax; on older
+    jax falls back to the sharding-in-types abstract mesh and then the
+    thread-resources physical mesh set by ``with mesh:``.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src import mesh as mesh_lib  # legacy fallback only
+    try:
+        am = mesh_lib.get_abstract_mesh()
+        if am is not None and am.shape:
+            return am
+    except Exception:       # pragma: no cover - API shape varies per version
+        pass
+    phys = mesh_lib.thread_resources.env.physical_mesh
+    return None if phys.empty else phys

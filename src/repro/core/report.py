@@ -8,6 +8,9 @@
 * :func:`kernel_table` — top-N kernels by bound time (Table II data).
 * :func:`zero_ai_table` — paper Table III.
 * :func:`terms_table` — the three-term roofline summary per experiment.
+* :func:`achieved_table` — measured vs bound per phase (the time-based
+  roofline summary; consumes ``repro.trace`` measurements or stored
+  record payloads).
 """
 
 from __future__ import annotations
@@ -34,8 +37,15 @@ def _fmt_si(x: float, unit: str = "") -> str:
 def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
                    width: int = 78, height: int = 24,
                    ai_range: tuple[float, float] = (2**-6, 2**14),
-                   title: str = "") -> str:
-    """Render a hierarchical roofline chart as text (paper Figs 3-9)."""
+                   title: str = "",
+                   achieved: Sequence[tuple[float, float]] | None = None
+                   ) -> str:
+    """Render a hierarchical roofline chart as text (paper Figs 3-9).
+
+    ``achieved``: optional measured (AI, FLOP/s) points — the time-based
+    roofline overlay from ``repro.trace`` — drawn as ``*`` under the bound
+    markers so the gap to the ceiling is visible per kernel.
+    """
     lo, hi = (math.log2(a) for a in ai_range)
     peak_top = max(machine.peak_flops.values())
     f_hi = math.log2(peak_top * 2)
@@ -77,6 +87,10 @@ def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
                 ch = ch.upper()
             put(p.ai, p.bound_flops_per_s, ch)
 
+    # measured achieved points (time-based roofline overlay)
+    for ai, flops_s in (achieved or ()):
+        put(ai, flops_s, "*")
+
     lines = [f"  {title}  [{machine.name}"
              f"{' empirical' if machine.empirical else ''}]  "
              f"y: FLOP/s (log2, top={_fmt_si(peak_top, 'FLOP/s')}), "
@@ -94,8 +108,11 @@ def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
                 axis[xi + j] = c
     lines.append(f"{'':>10} +{'-'*width}")
     lines.append(f"{'AI=':>10}  {''.join(axis)}")
-    lines.append(f"{'':>10}  markers: h/H=HBM v/V=VMEM (upper=hot) | "
-                 "ceilings: _=compute -=HBM .=VMEM")
+    legend = (f"{'':>10}  markers: h/H=HBM v/V=VMEM (upper=hot) | "
+              "ceilings: _=compute -=HBM .=VMEM")
+    if achieved:
+        legend += " | *=achieved"
+    lines.append(legend)
     return "\n".join(lines)
 
 
@@ -145,6 +162,34 @@ def zero_ai_table(census_by_phase: dict[str, dict[str, tuple[int, int]]]) -> str
     out.append(f"{'Total':<14}"
                + "".join(f"{str(t) + ' (100%)':>22}" for t in totals)
                + f"{sum(totals):>10}")
+    return "\n".join(out)
+
+
+def _phase_metric(m: "object", key: str, default=0.0):
+    """Metric from a trace PhaseMeasurement *or* a stored payload dict."""
+    if isinstance(m, dict):
+        return m.get(key, default)
+    return getattr(m, key, default)
+
+
+def achieved_table(results: "dict[str, dict[str, object]]") -> str:
+    """Measured-vs-bound summary per (config × phase): the time-based
+    roofline table.  ``results`` maps config name → {phase →
+    ``repro.trace.PhaseMeasurement`` | stored record payload dict}.
+    """
+    out = [f"{'config/phase':<30}{'wall':>11}{'bound_ov':>11}{'bound_ser':>11}"
+           f"{'achieved':>12}{'%roof':>8}{'dominant':>12}"]
+    for config, phases in results.items():
+        for phase, m in phases.items():
+            wall = float(_phase_metric(m, "wall_s"))
+            out.append(
+                f"{(config + '/' + phase)[:29]:<30}"
+                f"{wall*1e3:>9.3f}ms"
+                f"{float(_phase_metric(m, 'bound_overlap_s'))*1e3:>9.3f}ms"
+                f"{float(_phase_metric(m, 'bound_serial_s'))*1e3:>9.3f}ms"
+                f"{_fmt_si(float(_phase_metric(m, 'achieved_flops_per_s')), 'F/s'):>12}"
+                f"{100*float(_phase_metric(m, 'pct_of_roofline')):>7.1f}%"
+                f"{str(_phase_metric(m, 'dominant', '')):>12}")
     return "\n".join(out)
 
 

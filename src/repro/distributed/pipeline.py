@@ -21,6 +21,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import axis_size
+
 
 def _pvary(x: jax.Array, axis: str) -> jax.Array:
     """Mark an unvarying value as device-varying over a manual mesh axis
@@ -43,7 +45,7 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
     x_mbs: (M, b, s, d) microbatched hidden states (valid on stage 0).
     Returns (M, b, s, d) stage-S-1 outputs (valid on the last stage).
     """
-    S = jax.lax.axis_size(axis)
+    S = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     M = x_mbs.shape[0]
     ticks = M + S - 1
@@ -76,7 +78,7 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
 
 def stage_slice(n_layers: int, axis: str = "pod") -> tuple[jax.Array, int]:
     """(my first layer index, layers per stage) inside shard_map."""
-    S = jax.lax.axis_size(axis)
+    S = axis_size(axis)
     per = n_layers // S
     return jax.lax.axis_index(axis) * per, per
 

@@ -31,6 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import RunConfig
+from repro.core.compat import ambient_mesh
 from repro.models.params import P, tree_map_specs
 
 # logical axis → mesh axis under TP/EP
@@ -216,14 +217,17 @@ def decode_state_shardings(state_abstract: Any, mesh: Mesh, run: RunConfig
 
     def one(x):
         rank = len(x.shape)
+        # newer jax canonicalizes 1-tuples in PartitionSpec; do it ourselves
+        # so specs compare equal across versions
+        bspec = b if len(b) > 1 else (b[0] if b else None)
         if rank <= 1:                          # lengths / scalars
             spec = [None] * rank
             if rank == 1 and b and x.shape[0] % _axis_size(mesh, b) == 0:
-                spec[0] = b
+                spec[0] = bspec
             return NamedSharding(mesh, PartitionSpec(*spec))
         spec: list = [None] * rank
         if b and x.shape[1] % _axis_size(mesh, b) == 0:
-            spec[1] = b
+            spec[1] = bspec
         if run.tp and msize:
             # prefer the kv-heads/channel dim (dim 3 of (L,B,S,K,hd) caches,
             # dim 3 of (L,B,H,P,N) ssd states): an in-place cache update at
@@ -280,7 +284,7 @@ def constrain(x: jax.Array, run: RunConfig, *logical: str | None) -> jax.Array:
     No-op when there is no ambient mesh (plain CPU tests) or when a dim does
     not divide its mesh axes (falls back to unconstrained for that dim).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_mesh()
     if mesh is None or not mesh.shape or int(np.prod(list(
             mesh.shape.values()))) == 1:
         return x

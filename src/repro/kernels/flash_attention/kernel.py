@@ -36,7 +36,9 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   *, block_q: int, block_k: int, sk: int, causal: bool):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)                      # (bq, hd)
+    # index the leading block dim with slices, not ints: older pallas
+    # interpreters choke on scalar-int indices in the discharge rules
+    q = q_ref[...][0].astype(jnp.float32)                 # (bq, hd)
     scale = q.shape[-1] ** -0.5
     q = q * scale
 
@@ -52,10 +54,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     def body(ki, _):
         k_off = ki * block_k
-        k = pl.load(k_ref, (0, pl.dslice(k_off, block_k),
-                            slice(None))).astype(jnp.float32)   # (bk, hd)
-        v = pl.load(v_ref, (0, pl.dslice(k_off, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(k_off, block_k),
+                            slice(None)))[0].astype(jnp.float32)  # (bk, hd)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(k_off, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                       # (bq, bk)
         if causal:
             qpos = q_offset + jax.lax.broadcasted_iota(
@@ -73,7 +75,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         return ()
 
     jax.lax.fori_loop(0, nb, body, ())
-    o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc_ref[...] / l_ref[...][:, None]
+                  ).astype(o_ref.dtype)[None]
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -160,8 +160,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     t0 = time.time()
     cfg, run, fn, arg_specs, donate = build_cell(arch, shape, mesh, run)
+    from repro.core.compat import mesh_context
     jitted = jax.jit(fn, donate_argnums=donate)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(*arg_specs)
         compiled = lowered.compile()
     t_compile = time.time() - t0

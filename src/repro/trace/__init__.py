@@ -1,0 +1,34 @@
+"""Time-based roofline subsystem: measure, persist, compare.
+
+The analytical pipeline (``repro.core``) answers "how fast *could* this
+run"; this package answers "how fast *did* it run, and is it getting
+worse":
+
+* :mod:`repro.trace.collector` — execute the same compiled executable the
+  analyzer characterized and attribute wall time across kernels by their
+  bound-time weights (achieved GFLOP/s, %-of-roofline);
+* :mod:`repro.trace.timeline`  — lay measured phases against the
+  three-term ``T_compute/T_memory/T_collective`` envelope (overlap model);
+* :mod:`repro.trace.store`     — append-only, schema-versioned JSONL
+  results store with run provenance (git SHA, host, machine, mesh);
+* :mod:`repro.trace.compare`   — per-cell cross-run deltas + regression
+  flags;
+* :mod:`repro.trace.cli`       — ``python -m repro.trace``
+  (record / compare / report) over ``repro.configs.registry``.
+"""
+
+from repro.trace.collector import (  # noqa: F401
+    KernelMeasurement, PhaseMeasurement, achieved_points, attribute_time,
+    collect_phase, collect_phases, kernel_bound_s, measurement_from_profile,
+)
+from repro.trace.compare import (  # noqa: F401
+    CellDelta, compare_last, compare_records, format_deltas, has_regressions,
+    regressions,
+)
+from repro.trace.store import (  # noqa: F401
+    PHASE_METRICS, SCHEMA_VERSION, TraceRecord, TraceStore, git_sha,
+    host_fingerprint, phase_payload, record_from_phases,
+)
+from repro.trace.timeline import (  # noqa: F401
+    PhaseSpan, Timeline, ascii_timeline, build_timeline, timeline_from_record,
+)

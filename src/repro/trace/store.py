@@ -1,0 +1,216 @@
+"""Append-only JSONL results store for measured trace runs.
+
+One line per run, schema-versioned (``schema_version``) so records written
+by older code stay readable as the format grows (automated collection +
+persistence workflow in the spirit of arXiv 2009.02449).  Run metadata
+binds every record to its provenance: git SHA, host fingerprint, machine
+model, config name and mesh — enough to answer "what changed?" when
+``repro.trace.compare`` flags a regression between two commits.
+
+The store is deliberately boring: plain JSONL, append-only, corrupt lines
+skipped on read (a crashed writer never poisons history), records from a
+*newer* schema skipped with a warning instead of mis-parsed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+import uuid
+import warnings
+from typing import Any, Iterable, Mapping
+
+from repro.trace.collector import PhaseMeasurement
+
+SCHEMA_VERSION = 1
+
+# phase-payload metric keys every record carries (compare iterates these)
+PHASE_METRICS = ("wall_s", "achieved_flops_per_s", "pct_of_roofline",
+                 "bound_overlap_s", "bound_serial_s")
+
+
+def git_sha(repo_root: str | None = None) -> str:
+    """HEAD commit of the repo containing this file (or ``repo_root``)."""
+    root = repo_root or os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def host_fingerprint() -> dict[str, str]:
+    """Where the measurement ran (cross-host comparisons need a warning)."""
+    import jax
+    return {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+
+
+@dataclasses.dataclass
+class TraceRecord:
+    """One measured run of one config: the unit of storage and comparison."""
+
+    schema_version: int
+    run_id: str
+    timestamp: float                 # unix seconds
+    git_sha: str
+    config: str
+    machine: str                     # MachineSpec.name the %s are against
+    mesh: dict[str, int]             # axis name -> size ({} = single device)
+    host: dict[str, str]
+    phases: dict[str, dict[str, Any]]   # phase name -> metric payload
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        # no sort_keys: phase insertion order IS the step order (fwd→bwd→opt)
+        # and the timeline re-renders from it
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TraceRecord":
+        """Tolerant constructor: unknown keys dropped, missing keys defaulted
+        (older minor revisions of the same schema stay loadable)."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw.setdefault("schema_version", 0)
+        kw.setdefault("run_id", "")
+        kw.setdefault("timestamp", 0.0)
+        kw.setdefault("git_sha", "unknown")
+        kw.setdefault("config", "")
+        kw.setdefault("machine", "")
+        kw.setdefault("mesh", {})
+        kw.setdefault("host", {})
+        kw.setdefault("phases", {})
+        return cls(**kw)
+
+
+def phase_payload(m: PhaseMeasurement, top_kernels: int = 8
+                  ) -> dict[str, Any]:
+    """Serializable per-phase metrics (the record's unit cell)."""
+    t = m.terms
+    return {
+        "wall_s": m.wall_s,
+        "iters": m.iters,
+        "achieved_flops_per_s": m.achieved_flops_per_s,
+        "pct_of_roofline": m.pct_of_roofline,
+        "bound_overlap_s": m.bound_overlap_s,
+        "bound_serial_s": m.bound_serial_s,
+        "compute_s": t.compute_s,
+        "memory_s": t.memory_s,
+        "collective_s": t.collective_s,
+        "dominant": m.dominant,
+        "flops": m.flops,
+        "hbm_bytes": m.hbm_bytes,
+        "kernels": [
+            {"name": k.name, "category": k.category,
+             "flops": k.flops, "hbm_bytes": k.hbm_bytes,
+             "ai_hbm": k.ai_hbm, "bound_s": k.bound_s,
+             "attributed_s": k.attributed_s,
+             "achieved_flops_per_s": k.achieved_flops_per_s,
+             "pct_of_roofline": k.pct_of_roofline}
+            for k in m.kernels[:top_kernels]
+        ],
+    }
+
+
+def record_from_phases(config: str,
+                       measurements: Mapping[str, PhaseMeasurement],
+                       machine: str,
+                       mesh: Mapping[str, int] | None = None,
+                       meta: Mapping[str, Any] | None = None,
+                       top_kernels: int = 8) -> TraceRecord:
+    return TraceRecord(
+        schema_version=SCHEMA_VERSION,
+        run_id=uuid.uuid4().hex[:12],
+        timestamp=time.time(),
+        git_sha=git_sha(),
+        config=config,
+        machine=machine,
+        mesh=dict(mesh or {}),
+        host=host_fingerprint(),
+        phases={name: phase_payload(m, top_kernels)
+                for name, m in measurements.items()},
+        meta=dict(meta or {}))
+
+
+class TraceStore:
+    """Append-only JSONL store of :class:`TraceRecord` lines."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def append(self, rec: TraceRecord) -> TraceRecord:
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(rec.to_json() + "\n")
+        return rec
+
+    def records(self, config: str | None = None) -> list[TraceRecord]:
+        """All readable records, oldest first; corrupt lines and
+        newer-schema records are skipped (with a warning), never fatal."""
+        if not os.path.exists(self.path):
+            return []
+        out: list[TraceRecord] = []
+        with open(self.path) as f:
+            for i, line in enumerate(f):
+                if not line.strip():
+                    continue
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError:
+                    warnings.warn(f"{self.path}:{i+1}: corrupt line skipped")
+                    continue
+                if d.get("schema_version", 0) > SCHEMA_VERSION:
+                    warnings.warn(
+                        f"{self.path}:{i+1}: schema "
+                        f"{d.get('schema_version')} > {SCHEMA_VERSION} "
+                        "(written by newer code) — skipped")
+                    continue
+                rec = TraceRecord.from_dict(d)
+                if config is None or rec.config == config:
+                    out.append(rec)
+        return out
+
+    def last(self, config: str | None = None, n: int = 1
+             ) -> list[TraceRecord]:
+        """Last ``n`` records (oldest→newest among those returned)."""
+        recs = self.records(config)
+        return recs[-n:] if n else []
+
+    def run(self, run_id: str) -> TraceRecord | None:
+        for rec in self.records():
+            if rec.run_id == run_id or rec.run_id.startswith(run_id):
+                return rec
+        return None
+
+    def configs(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for rec in self.records():
+            seen.setdefault(rec.config)
+        return list(seen)
+
+
+def iter_jsonl(path: str) -> Iterable[dict]:
+    """Raw dict view of a store file (debugging / ad-hoc analysis)."""
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                try:
+                    yield json.loads(line)
+                except json.JSONDecodeError:
+                    continue

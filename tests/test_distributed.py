@@ -51,7 +51,7 @@ _SPAWN = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.core.compat import shard_map
 
     mesh = jax.make_mesh((8,), ("pod",))
 

@@ -1,0 +1,122 @@
+"""Report rendering on synthetic KernelRecords — every artifact the paper
+produces (roofline chart, kernel table, zero-AI table, terms table) plus
+the measured achieved_table, without compiling anything."""
+
+import pytest
+
+from repro.core import get_machine
+from repro.core.hlo_analysis import KernelRecord, ModuleAnalysis
+from repro.core.report import (achieved_table, ascii_roofline, kernel_table,
+                               terms_table, zero_ai_table)
+from repro.core.roofline import roofline_terms
+
+MACHINE = get_machine("tpu-v5e")
+
+
+def _rec(name, flops_bf16=0.0, flops_f32=0.0, hbm=1, vmem=1, count=1,
+         category="matmul"):
+    by_class = {}
+    if flops_bf16:
+        by_class["bf16"] = flops_bf16
+    if flops_f32:
+        by_class["f32"] = flops_f32
+    return KernelRecord(name=name, opcode="fusion", op_name="",
+                        exec_count=count, flops_by_class=by_class,
+                        hbm_bytes=hbm, vmem_bytes=vmem, category=category)
+
+
+@pytest.fixture
+def analysis():
+    return ModuleAnalysis(kernels=[
+        _rec("big_matmul", flops_bf16=4e10, hbm=16e6, vmem=64e6),
+        _rec("small_matmul", flops_bf16=1e8, hbm=4e6, vmem=8e6, count=4),
+        _rec("softmax", flops_f32=2e7, hbm=8e6, vmem=8e6,
+             category="elementwise"),
+        _rec("transpose", hbm=32e6, vmem=32e6, category="zero-ai"),
+    ], collectives=[])
+
+
+class TestAsciiRoofline:
+    def test_renders_markers_and_ceilings(self, analysis):
+        chart = ascii_roofline(analysis.kernels, MACHINE, title="t")
+        lines = chart.splitlines()
+        assert len(lines) > 20
+        assert "FLOP/s" in chart and "AI" in chart
+        body = "\n".join(lines[1:-2])
+        # hbm + vmem markers present; hot kernel uppercase somewhere
+        assert "h" in body.lower()
+        assert "v" in body.lower()
+        assert any(c in body for c in "HV")
+        # ceilings drawn
+        assert "_" in body and "-" in body and "." in body
+
+    def test_zero_flop_kernels_skipped(self):
+        chart = ascii_roofline([_rec("t", hbm=1e6, category="zero-ai")],
+                               MACHINE)
+        assert "h" not in "\n".join(chart.splitlines()[1:-2])
+
+    def test_achieved_overlay(self, analysis):
+        # points chosen inside the chart's y-range (bottom ≈ peak/2^7)
+        pts = [(250.0, 5e13), (16.0, 8e12)]
+        chart = ascii_roofline(analysis.kernels, MACHINE, achieved=pts)
+        assert "*" in "\n".join(chart.splitlines()[1:-2])
+        assert "*=achieved" in chart
+        plain = ascii_roofline(analysis.kernels, MACHINE)
+        assert "*=achieved" not in plain
+
+    def test_empty_records_still_render(self):
+        chart = ascii_roofline([], MACHINE)
+        assert "FLOP/s" in chart
+
+
+class TestKernelTable:
+    def test_ranks_by_bound_time(self, analysis):
+        table = kernel_table(analysis, MACHINE)
+        lines = table.splitlines()
+        assert "kernel" in lines[0]
+        # the big matmul dominates the bound time → first data row
+        assert "big_matmul" in lines[1]
+        assert "transpose" in table           # zero-AI rows still listed
+        # percent column sums to ~100
+        pcts = [float(l.split()[-1]) for l in lines[1:]]
+        assert sum(pcts) == pytest.approx(100.0, abs=0.5)
+
+    def test_top_n_truncates_with_rest_row(self, analysis):
+        table = kernel_table(analysis, MACHINE, top_n=2)
+        assert "more" in table.splitlines()[-1]
+
+
+class TestTermsAndZeroAi:
+    def test_terms_table(self, analysis):
+        terms = roofline_terms(analysis, MACHINE)
+        out = terms_table({"exp": terms})
+        assert "dominant" in out and "exp" in out
+        assert terms.dominant in out
+
+    def test_zero_ai_table_totals(self, analysis):
+        census = {"fwd": analysis.zero_ai_census(),
+                  "bwd": analysis.zero_ai_census()}
+        out = zero_ai_table(census)
+        assert "zero-AI" in out and "Total" in out
+        # 1 zero-AI invocation + 6 non-zero per phase
+        assert "(100%)" in out
+
+
+class TestAchievedTable:
+    def test_accepts_measurements_and_payload_dicts(self, analysis):
+        from repro.trace import attribute_time
+        from repro.trace.collector import PhaseMeasurement
+        terms = roofline_terms(analysis, MACHINE)
+        m = PhaseMeasurement(
+            name="fwd", wall_s=2e-3, iters=3, machine=MACHINE.name,
+            terms=terms, kernels=attribute_time(analysis, MACHINE, 2e-3),
+            flops=analysis.total_flops, hbm_bytes=analysis.total_hbm_bytes)
+        payload = {"wall_s": 1e-3, "bound_overlap_s": 5e-4,
+                   "bound_serial_s": 8e-4, "achieved_flops_per_s": 3e12,
+                   "pct_of_roofline": 0.5, "dominant": "memory"}
+        out = achieved_table({"cfg": {"fwd": m, "bwd": payload}})
+        lines = out.splitlines()
+        assert "wall" in lines[0] and "%roof" in lines[0]
+        assert "cfg/fwd" in out and "cfg/bwd" in out
+        assert "memory" in out
+        assert "3.00 TF/s" in out

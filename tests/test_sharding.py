@@ -120,6 +120,7 @@ _SPAWN = textwrap.dedent("""
     from repro.core import analyze_compiled, get_machine, roofline_terms
     from repro.distributed import sharding as shd
     from repro.models import api as M
+    from repro.core.compat import mesh_context
     from repro.train import step as TS
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -142,7 +143,7 @@ _SPAWN = textwrap.dedent("""
         batch_abs, shd.shard_batch_dim(batch_abs, mesh, run))
 
     step = TS.make_train_step(model, run)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         compiled = jax.jit(step, donate_argnums=0).lower(
             state_specs, batch_specs).compile()
     an = analyze_compiled(compiled, devices_per_pod=8)
@@ -153,7 +154,7 @@ _SPAWN = textwrap.dedent("""
     import tempfile, numpy as np
     from repro.checkpoint import checkpointer as ckpt
     from repro.train.step import init_state
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state = init_state(model, run, jax.random.PRNGKey(0))
         state = jax.device_put(state, state_sh)
     mesh2 = jax.make_mesh((4, 2), ("data", "model"))
