@@ -25,12 +25,14 @@ SUITES = (
     "kernel_bench",      # SPerf kernel-vs-XLA structural terms
     "train_throughput",  # operational: measured smoke train steps
     "trace_smoke",       # repro.trace: record→store→compare loop
+    "sweep_smoke",       # repro.sweep: campaign→store→report loop + cache
 )
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=SUITES)
+    ap.add_argument("--only", default=None, metavar="SUITE",
+                    help="run a single suite (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="print suite names and exit")
     args = ap.parse_args(argv)
@@ -38,6 +40,12 @@ def main(argv=None) -> int:
         for name in SUITES:
             print(name)
         return 0
+    if args.only is not None and args.only not in SUITES:
+        print(f"benchmarks.run: unknown suite {args.only!r}; valid suites:",
+              file=sys.stderr)
+        for name in SUITES:
+            print(f"  {name}", file=sys.stderr)
+        return 2
     failures = 0
     for name in SUITES:
         if args.only and name != args.only:

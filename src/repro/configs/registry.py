@@ -43,13 +43,47 @@ def get_smoke(name: str) -> ModelConfig:
     return _module(name).SMOKE
 
 
+def family_of(name: str) -> str:
+    return get_config(name).family
+
+
+def select(selector: str) -> tuple[str, ...]:
+    """Expand one config selector (``repro.sweep`` spec entries):
+
+    * ``"all"``            → the assigned archs (``ARCHS``),
+    * ``"family:<fam>"``   → every assigned arch of that family,
+    * an exact name        → itself (including ``deepcam``).
+    """
+    if selector == "all":
+        return ARCHS
+    if selector.startswith("family:"):
+        fam = selector.removeprefix("family:")
+        out = tuple(a for a in ARCHS if family_of(a) == fam)
+        if not out:
+            raise KeyError(f"no assigned arch has family {fam!r}")
+        return out
+    if selector not in _MODULES:
+        raise KeyError(f"unknown arch {selector!r}; known: {sorted(_MODULES)} "
+                       "(or 'all' / 'family:<fam>')")
+    return (selector,)
+
+
+def select_many(selectors) -> tuple[str, ...]:
+    """Expand + dedupe a list of selectors, preserving first-seen order."""
+    seen: dict[str, None] = {}
+    for sel in selectors:
+        for name in select(sel):
+            seen.setdefault(name)
+    return tuple(seen)
+
+
 def cells(arch: str) -> list[ShapeSpec]:
     """The applicable (arch x shape) cells for the 40-cell grid."""
     cfg = get_config(arch)
     out = []
     for s in SHAPES.values():
         if s.name == "long_500k" and not cfg.supports_long_context:
-            continue   # quadratic-attention archs skip 500k decode (DESIGN §5)
+            continue   # quadratic archs skip 500k decode (docs/DESIGN.md §5)
         out.append(s)
     return out
 

@@ -91,7 +91,7 @@ class MachineSpec:
 
 # TPU v5e — the primary target (constants per task spec).
 # fp32 has no dedicated MXU path; the modeled ceiling is 1/4 of bf16
-# (documented assumption, see DESIGN.md §4).  VMEM bandwidth is a modeled
+# (documented assumption, see docs/DESIGN.md §4).  VMEM bandwidth is a modeled
 # constant used only to spread the hierarchical-AI triplets (paper's L1/L2
 # vs HBM distinction); it is clearly labeled modeled, not measured.
 TPU_V5E = MachineSpec(

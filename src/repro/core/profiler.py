@@ -189,13 +189,18 @@ def profile_fn(fn: Callable, *, args: Sequence[Any],
                measure: bool = False,
                measure_iters: int = 10,
                measure_warmup: int = 3,
-               concrete_args: Sequence[Any] | None = None) -> ProfileResult:
+               concrete_args: Sequence[Any] | None = None,
+               matmul_class: str | None = None) -> ProfileResult:
     """Lower + compile ``fn`` on ``args`` (ShapeDtypeStructs ok) and analyze it.
 
     ``measure=True`` additionally *executes* the very same compiled object
     (``concrete_args`` if given, else zero-filled materializations of
     ``args``) and records the median wall time in ``ProfileResult.wall_s``
     — the measured half of the time-based roofline.
+
+    ``matmul_class``: ceiling class for dot/conv FLOPs whose operand chains
+    show no reduced-precision hop (the CPU bf16-legalization workaround,
+    docs/DESIGN.md §9) — pass the AMP policy's compute dtype class.
     """
     if isinstance(machine, str):
         machine = get_machine(machine)
@@ -205,7 +210,8 @@ def profile_fn(fn: Callable, *, args: Sequence[Any],
                           static_argnums=static_argnums)
     n_dev = len(mesh.devices.flat) if mesh is not None else 1
     res = profile_compiled(name or getattr(fn, "__name__", "fn"), compiled,
-                           machine, devices_per_pod, n_dev)
+                           machine, devices_per_pod, n_dev,
+                           matmul_class=matmul_class)
     if measure:
         concrete = (tuple(concrete_args) if concrete_args is not None
                     else materialize_args(args))

@@ -170,7 +170,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     machine = get_machine(machine_name)
     n_dev = int(mesh.devices.size)
     # dot/conv FLOPs classify onto the AMP policy's compute-dtype ceiling
-    # (CPU bf16 legalization hides bf16 in the compiled module; DESIGN §9)
+    # (CPU bf16 legalization hides bf16 in the compiled module;
+    # docs/DESIGN.md §9)
     from repro.core.hlo_analysis import dtype_class
     mm_class = dtype_class(
         "bf16" if run.compute_dtype == jnp.bfloat16 else "f32")

@@ -1,0 +1,26 @@
+"""Cross-config roofline campaign engine.
+
+One command characterizes the whole registry: a declarative
+:class:`~repro.sweep.spec.SweepSpec` (configs × mesh shapes × AMP policies
+× batch sizes) expands into a work list, a process pool runs the
+analytical pipeline — and optionally the measured ``repro.trace`` pass —
+for every point, each result persists into the schema-versioned trace
+store, and the aggregate side renders the ranked achieved-vs-bound table
+plus a hierarchical roofline gallery across configs.  The batch,
+tool-driven workflow of the companion papers (arXiv 2009.04598,
+arXiv 2009.02449) applied to the full config registry.
+
+This package's ``__init__`` stays jax-free on purpose: sweep worker
+processes must set their XLA device count before anything imports jax
+(see ``repro.sweep.engine``).  Import the submodules for the heavy parts:
+
+* :mod:`repro.sweep.spec`      — SweepSpec / SweepPoint, expansion, presets
+* :mod:`repro.sweep.engine`    — worker pools, caching, store persistence
+* :mod:`repro.sweep.aggregate` — ranked summary + roofline gallery
+* :mod:`repro.sweep.cli`       — ``python -m repro.sweep`` run / report
+"""
+
+from repro.sweep.spec import (  # noqa: F401
+    SweepPoint, SweepSpec, invalid_reason, parse_mesh, points_by_devices,
+    smoke_spec,
+)

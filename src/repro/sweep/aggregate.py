@@ -1,0 +1,158 @@
+"""Cross-config aggregation: stored sweep records → ranked table + gallery.
+
+The report side is *store-only*: it re-renders everything from the JSONL
+records a campaign persisted (no re-running, same as ``repro.trace
+report``), so a sweep finished on one host can be ranked and charted on
+another.  Two artifacts:
+
+* :func:`summary_rows` → ``repro.core.report.sweep_table`` — one row per
+  sweep point, achieved-vs-bound per config with per-memory-level time
+  fractions, ranked best-%-of-roofline first;
+* :func:`gallery` — one hierarchical ascii roofline per config (paper
+  Figs 3-9 layout) with the measured achieved points overlaid, rebuilt
+  from the records' persisted top-kernel payloads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+from repro.core.hlo_analysis import KernelRecord
+from repro.core.machine import MACHINES, get_machine
+from repro.core.report import ascii_roofline, sweep_table
+from repro.trace.store import TraceRecord, TraceStore
+
+_AMP_CLASS = {"O0": "f32", "O1": "bf16", "O2": "bf16"}
+
+
+def sweep_records(store: TraceStore, name: str | None = None
+                  ) -> list[TraceRecord]:
+    """All records written by sweeps (``meta.sweep_point`` present),
+    optionally restricted to one campaign name, oldest first."""
+    def pred(rec: TraceRecord) -> bool:
+        if "sweep_point" not in rec.meta:
+            return False
+        return name is None or rec.meta.get("sweep") == name
+    return store.records_where(pred)
+
+
+def latest_per_point(records: Sequence[TraceRecord]
+                     ) -> dict[str, TraceRecord]:
+    """Newest record per sweep-point key (re-runs supersede, history kept)."""
+    out: dict[str, TraceRecord] = {}
+    for rec in records:                      # oldest → newest
+        out[rec.meta["sweep_point"]] = rec
+    return out
+
+
+def _label(rec: TraceRecord) -> str:
+    # stamped by the engine (SweepPoint.label); fall back for hand-rolled
+    # records so a report never crashes on a sparse meta
+    return str(rec.meta.get("label") or rec.config)
+
+
+def summary_row(rec: TraceRecord) -> dict[str, Any]:
+    """Fold one record's phases into a single achieved-vs-bound row."""
+    machine = get_machine(rec.machine) if rec.machine in MACHINES \
+        else get_machine("cpu-host")
+    wall = sum(float(p.get("wall_s", 0.0)) for p in rec.phases.values())
+    bound_ov = sum(float(p.get("bound_overlap_s", 0.0))
+                   for p in rec.phases.values())
+    flops = sum(float(p.get("flops", 0.0)) for p in rec.phases.values())
+    hbm = sum(float(p.get("hbm_bytes", 0.0)) for p in rec.phases.values())
+    vmem = sum(float(p.get("vmem_bytes", 0.0)) for p in rec.phases.values())
+    # per-memory-level bandwidth-bound times (the hierarchical view): what
+    # fraction of the measured wall each level's streaming time accounts for
+    hbm_s = hbm / machine.hbm.bytes_per_s
+    vmem_s = vmem / machine.vmem.bytes_per_s
+    terms = {"compute": 0.0, "memory": 0.0, "collective": 0.0}
+    for p in rec.phases.values():
+        terms["compute"] += float(p.get("compute_s", 0.0))
+        terms["memory"] += float(p.get("memory_s", 0.0))
+        terms["collective"] += float(p.get("collective_s", 0.0))
+    measured = wall > 0
+    return {
+        "key": rec.meta.get("sweep_point", rec.run_id),
+        "config": rec.config,
+        "label": _label(rec),
+        "measured": measured,
+        "machine": rec.machine,
+        "wall_s": wall,
+        "bound_overlap_s": bound_ov,
+        "achieved_flops_per_s": flops / wall if measured else 0.0,
+        "pct_of_roofline": bound_ov / wall if measured else 0.0,
+        "hbm_frac": hbm_s / wall if measured else 0.0,
+        "vmem_frac": vmem_s / wall if measured else 0.0,
+        "dominant": max(terms, key=terms.get),
+        "run_id": rec.run_id,
+    }
+
+
+def summary_rows(records: Mapping[str, TraceRecord] | Sequence[TraceRecord]
+                 ) -> list[dict[str, Any]]:
+    recs = (records.values() if isinstance(records, Mapping) else records)
+    return [summary_row(r) for r in recs]
+
+
+def render_summary(records: Mapping[str, TraceRecord] | Sequence[TraceRecord]
+                   ) -> str:
+    return sweep_table(summary_rows(records))
+
+
+# --------------------------------------------------------------------------
+# Gallery: rebuild roofline charts from persisted kernel payloads
+# --------------------------------------------------------------------------
+
+def kernels_from_record(rec: TraceRecord) -> list[KernelRecord]:
+    """Reconstruct chartable :class:`KernelRecord`\\ s from a record's
+    persisted top-kernel payloads.
+
+    The payload stores *totals* (FLOPs × exec_count), so the records are
+    rebuilt with ``exec_count=1``; FLOPs all classify onto the AMP policy's
+    compute class (per-class splits are not persisted — good enough to
+    place each kernel's AI/ceiling point, which is what the chart needs).
+    """
+    cls = _AMP_CLASS.get(str(rec.meta.get("amp", "O1")), "bf16")
+    out: list[KernelRecord] = []
+    for p in rec.phases.values():
+        for k in p.get("kernels", ()):
+            flops = float(k.get("flops", 0.0))
+            hbm = int(k.get("hbm_bytes", 0))
+            vmem = int(k.get("vmem_bytes", 0)) or hbm
+            out.append(KernelRecord(
+                name=str(k.get("name", "?")), opcode="fusion", op_name="",
+                exec_count=1,
+                flops_by_class={cls: flops} if flops else {},
+                hbm_bytes=hbm, vmem_bytes=vmem,
+                category=str(k.get("category", "?"))))
+    return out
+
+
+def achieved_from_record(rec: TraceRecord) -> list[tuple[float, float]]:
+    """(AI_hbm, achieved FLOP/s) overlay points from persisted kernels."""
+    pts = []
+    for p in rec.phases.values():
+        for k in p.get("kernels", ()):
+            ai = float(k.get("ai_hbm", 0.0))
+            ach = float(k.get("achieved_flops_per_s", 0.0))
+            if ai > 0 and ach > 0:
+                pts.append((ai, ach))
+    return pts
+
+
+def gallery(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
+            max_charts: int = 12) -> str:
+    """One hierarchical roofline per point, measured achieved overlaid."""
+    recs = list(records.values() if isinstance(records, Mapping)
+                else records)
+    charts = []
+    for rec in recs[:max_charts]:
+        machine = get_machine(rec.machine) if rec.machine in MACHINES \
+            else get_machine("cpu-host")
+        charts.append(ascii_roofline(
+            kernels_from_record(rec), machine, title=_label(rec),
+            achieved=achieved_from_record(rec) or None))
+    if len(recs) > max_charts:
+        charts.append(f"... {len(recs) - max_charts} more point(s) — "
+                      "rerun with a higher --charts limit")
+    return "\n\n".join(charts)

@@ -1,0 +1,351 @@
+"""Campaign execution: expand → (pool of workers) → trace store.
+
+Every sweep point runs the analytical pipeline (lower + compile + HLO walk
+→ three-term bounds) and, when ``measured``, executes the *same* compiled
+executable to fold wall time back in (``repro.trace``).  One
+schema-versioned :class:`~repro.trace.store.TraceRecord` per point lands in
+the store, stamped with the sweep name and the point's content hash — the
+report side groups on those.
+
+Two mechanics matter here:
+
+* **Process-pool workers.**  XLA's host-platform device count is fixed at
+  jax import, so a point whose mesh needs N > 1 (virtual) devices cannot
+  run in a process that already imported jax.  The engine groups points by
+  device count and runs one spawn-context pool per group; each worker's
+  initializer sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+  *before* the first job triggers the lazy jax import.  This module
+  therefore imports neither jax nor ``repro.trace`` at module scope.
+
+* **Per-point analysis caching.**  Analytical (bound-only) points are pure
+  functions of (point, jax version, machine model): their phase payloads
+  are cached under the point key, so re-running a campaign recompiles only
+  points whose spec actually changed.  Measured points always execute —
+  a wall-clock sample is not cacheable — but still share the store schema.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import traceback
+from concurrent.futures import ProcessPoolExecutor
+from typing import Any, Callable, Mapping
+
+from repro.sweep.spec import SweepPoint, SweepSpec, points_by_devices
+
+DEFAULT_STORE = "benchmarks/results/sweep.jsonl"
+DEFAULT_CACHE_DIR = "benchmarks/results/sweep_cache"
+
+
+@dataclasses.dataclass
+class PointResult:
+    """Outcome of one point: a stored record id, or a failure."""
+
+    point: SweepPoint
+    run_id: str | None = None
+    error: str | None = None
+    cached: bool = False
+    wall_s: float = 0.0             # total measured step time (0 = analytical)
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclasses.dataclass
+class SweepResult:
+    results: list[PointResult]
+    skipped: list[tuple[SweepPoint, str]]
+
+    @property
+    def n_ok(self) -> int:
+        return sum(1 for r in self.results if r.ok)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.results if not r.ok)
+
+    @property
+    def n_cached(self) -> int:
+        return sum(1 for r in self.results if r.cached)
+
+
+# --------------------------------------------------------------------------
+# One point, in-process (lazy jax import — workers set XLA_FLAGS first)
+# --------------------------------------------------------------------------
+
+def _amp_run(amp: str):
+    from repro.configs.base import RunConfig
+    return RunConfig(amp=amp)
+
+
+def _build_point(point: SweepPoint):
+    """(model, run, phases, shardings | None, mesh | None) for one point."""
+    import jax
+
+    from repro.configs.registry import get_config, get_smoke
+    from repro.models import api as M
+    from repro.trace.cli import build_phase_args
+
+    cfg = get_smoke(point.config) if point.smoke else get_config(point.config)
+    run = _amp_run(point.amp)
+    model = M.build(cfg)
+    phases = build_phase_args(model, run, seq=point.seq, batch=point.batch,
+                              concrete=point.measured)
+    if point.n_devices == 1:
+        return model, run, phases, None, None
+
+    if jax.device_count() < point.n_devices:
+        raise RuntimeError(
+            f"{point.label}: needs {point.n_devices} devices but this "
+            f"process has {jax.device_count()} — run through the sweep "
+            "engine's worker pool (it sets the XLA host-device count), "
+            "not inline")
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(point.mesh, ("data", "model"))
+    pshard = shd.param_shardings(model.spec, mesh, run)
+    shardings: dict[str, tuple] = {}
+    for name, (_fn, args) in phases.items():
+        if name == "opt":
+            params, grads, opt_state = args
+            oshard = shd.opt_state_shardings(opt_state, pshard, mesh)
+            shardings[name] = (pshard, pshard, oshard)
+        else:
+            _params, batch = args
+            shardings[name] = (pshard,
+                               shd.shard_batch_dim(batch, mesh, run))
+    return model, run, phases, shardings, mesh
+
+
+def _matmul_class(run) -> str | None:
+    """AMP policy → assumed dot/conv ceiling class (docs/DESIGN.md §9)."""
+    import jax.numpy as jnp
+    return "bf16" if run.compute_dtype == jnp.bfloat16 else None
+
+
+def _analytical_payload(res, machine) -> dict[str, Any]:
+    """Phase payload for a bound-only point: a zero-wall measurement, so
+    the schema (and serializer) is exactly ``trace.store.phase_payload``
+    — measured fields come out zero, the envelope/bound fields are the
+    record's substance."""
+    from repro.trace.collector import measurement_from_profile
+    from repro.trace.store import phase_payload
+    res.wall_s = 0.0
+    m = measurement_from_profile(res, machine)
+    # zero wall attributes zero time everywhere: rank by bound instead so
+    # the persisted top-kernel slice is the analytically hottest ones
+    m.kernels.sort(key=lambda k: -k.bound_s)
+    return phase_payload(m)
+
+
+def _cache_path(cache_dir: str, point: SweepPoint) -> str:
+    import jax
+
+    from repro.configs.registry import get_config, get_smoke
+    from repro.core.machine import MACHINES
+    # an analytical payload is a pure function of the point spec, the
+    # resolved config constants, the machine-model constants, and the jax
+    # version (lowering changes move the bounds) — hash all four so an
+    # edited config or MachineSpec invalidates instead of serving stale
+    # bounds
+    cfg = get_smoke(point.config) if point.smoke else get_config(point.config)
+    machine = MACHINES.get(point.machine)
+    env = json.dumps({
+        "config": dataclasses.asdict(cfg),
+        "machine": dataclasses.asdict(machine) if machine else point.machine,
+        "jax": jax.__version__,
+    }, sort_keys=True, default=str)
+    tag = f"{point.key}-{hashlib.sha256(env.encode()).hexdigest()[:16]}"
+    return os.path.join(cache_dir, f"{tag}.json")
+
+
+def _cache_load(cache_dir: str | None,
+                point: SweepPoint) -> dict[str, Any] | None:
+    if not cache_dir:
+        return None
+    path = _cache_path(cache_dir, point)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _cache_save(cache_dir: str | None, point: SweepPoint,
+                phases: Mapping[str, Any]) -> None:
+    if not cache_dir:
+        return
+    os.makedirs(cache_dir, exist_ok=True)
+    path = _cache_path(cache_dir, point)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(dict(phases), f)
+    os.replace(tmp, path)
+
+
+def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
+              cache_dir: str | None = None,
+              sweep_name: str | None = None):
+    """Execute one sweep point in this process → ``(TraceRecord, cached)``.
+
+    Measured points compile once, analyze + execute that executable
+    (``repro.trace.collector``); analytical points only lower/compile/
+    analyze — and skip even that on a cache hit.
+    """
+    from repro.trace.store import record_from_payloads, record_from_phases
+
+    mesh_dict = {"data": point.mesh[0], "model": point.mesh[1]}
+    meta = {"sweep_point": point.key, "sweep": sweep_name or "adhoc",
+            "label": point.label, **point.to_dict()}
+
+    if not point.measured:
+        cached = _cache_load(cache_dir, point)
+        if cached is not None:
+            return record_from_payloads(
+                point.config, cached, machine=point.machine, mesh=mesh_dict,
+                meta={**meta, "cached": True}), True
+
+        from repro.core.machine import get_machine
+        from repro.core.profiler import profile_fn
+        model, run, phases, shardings, mesh = _build_point(point)
+        machine = get_machine(point.machine)
+        payloads = {}
+        for name, (fn, args) in phases.items():
+            res = profile_fn(
+                fn, args=args, name=name, machine=machine, mesh=mesh,
+                in_shardings=shardings[name] if shardings else None,
+                matmul_class=_matmul_class(run))
+            payloads[name] = _analytical_payload(res, machine)
+        _cache_save(cache_dir, point, payloads)
+        return record_from_payloads(
+            point.config, payloads, machine=point.machine, mesh=mesh_dict,
+            meta={**meta, "cached": False}), False
+
+    # measured: compile once, analyze + execute the same executable
+    import jax
+
+    from repro.trace.collector import collect_phase
+    model, run, phases, shardings, mesh = _build_point(point)
+    ms = {}
+    for name, (fn, args) in phases.items():
+        in_sh = shardings[name] if shardings else None
+        concrete = args
+        if mesh is not None:
+            concrete = jax.device_put(args, in_sh)
+        ms[name] = collect_phase(
+            name, fn, args, machine=point.machine, iters=iters,
+            warmup=warmup, concrete_args=concrete, mesh=mesh,
+            in_shardings=in_sh, matmul_class=_matmul_class(run))
+    return record_from_phases(
+        point.config, ms, machine=point.machine, mesh=mesh_dict,
+        meta=meta), False
+
+
+# --------------------------------------------------------------------------
+# Worker pool (one pool per device-count group)
+# --------------------------------------------------------------------------
+
+def _worker_init(n_devices: int) -> None:
+    """Runs in the spawned worker before any job — and before the lazy jax
+    import — so the forced host-platform device count can still take."""
+    if n_devices > 1:
+        # appended, not prepended: XLA flag parsing is last-occurrence-wins,
+        # so this must beat any forced count inherited from the environment
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_devices}")
+
+
+def _point_job(point_dict: dict, iters: int, warmup: int,
+               cache_dir: str | None, sweep_name: str | None) -> dict:
+    """Worker entry: run one point, return a picklable outcome."""
+    point = SweepPoint.from_dict(point_dict)
+    try:
+        rec, cached = run_point(point, iters=iters, warmup=warmup,
+                                cache_dir=cache_dir, sweep_name=sweep_name)
+    except Exception:
+        return {"point": point_dict, "error": traceback.format_exc()}
+    return {"point": point_dict, "record": json.loads(rec.to_json()),
+            "cached": cached}
+
+
+def _append_outcome(store, point: SweepPoint, outcome: dict) -> PointResult:
+    from repro.trace.store import TraceRecord
+    if outcome.get("error"):
+        return PointResult(point, error=outcome["error"])
+    rec = TraceRecord.from_dict(outcome["record"])
+    store.append(rec)
+    wall = sum(float(p.get("wall_s", 0.0)) for p in rec.phases.values())
+    return PointResult(point, run_id=rec.run_id,
+                       cached=bool(outcome.get("cached")), wall_s=wall)
+
+
+def run_sweep(sweep: SweepSpec, *, store_path: str = DEFAULT_STORE,
+              workers: int | None = None,
+              cache_dir: str | None = DEFAULT_CACHE_DIR,
+              progress: Callable[[str], None] | None = None) -> SweepResult:
+    """Run a whole campaign: expand, execute, persist one record per point.
+
+    ``workers``: pool size; ``0`` runs every point inline in this process
+    (single-device points only — useful under pytest and for debugging).
+    ``None`` picks ``min(4, cpu_count)`` for analytical sweeps but ``1``
+    for measured ones: concurrent wall-clock samples contend for the same
+    CPUs and skew each other, so parallel measurement is opt-in.
+    """
+    from repro.trace.store import TraceStore
+
+    say = progress or (lambda s: None)
+    points, skipped = sweep.expand()
+    for p, reason in skipped:
+        say(f"[skip] {p.label}: {reason}")
+    store = TraceStore(store_path)
+    results: list[PointResult] = []
+
+    if workers is None:
+        workers = 1 if sweep.measure else min(4, os.cpu_count() or 1)
+
+    opts = (sweep.iters, sweep.warmup, cache_dir, sweep.name)
+    if workers == 0:
+        for point in points:
+            res = _append_outcome(store, point,
+                                  _point_job(point.to_dict(), *opts))
+            results.append(res)
+            say(_ok_line(res) if res.ok else f"[FAIL] {point.label}")
+        return SweepResult(results, skipped)
+
+    import multiprocessing
+    ctx = multiprocessing.get_context("spawn")
+    for n_devices, group in points_by_devices(points).items():
+        n_workers = min(workers, len(group))
+        with ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx,
+                                 initializer=_worker_init,
+                                 initargs=(n_devices,)) as pool:
+            futures = {pool.submit(_point_job, p.to_dict(), *opts): p
+                       for p in group}
+            for fut, point in futures.items():
+                try:
+                    outcome = fut.result()
+                except Exception:
+                    # a worker died (OOM-kill, native crash): report the
+                    # point as failed and keep draining the campaign —
+                    # sibling futures on the broken pool fail the same way
+                    outcome = {"error": traceback.format_exc()}
+                res = _append_outcome(store, point, outcome)
+                results.append(res)
+                say(_ok_line(res) if res.ok else f"[FAIL] {point.label}")
+    # keep campaign order (configs outermost), not completion order
+    order = {p.key: i for i, p in enumerate(points)}
+    results.sort(key=lambda r: order[r.point.key])
+    return SweepResult(results, skipped)
+
+
+def _ok_line(res: PointResult) -> str:
+    tag = " (cached)" if res.cached else ""
+    wall = (f" wall {res.wall_s*1e3:.3f} ms" if res.wall_s else " bound-only")
+    return f"[ok] {res.point.label} -> run {res.run_id}{wall}{tag}"

@@ -1,0 +1,200 @@
+"""Declarative sweep specs: (configs × meshes × AMP policies × batches).
+
+A :class:`SweepSpec` is the unit of a roofline *campaign* (the automated,
+tool-driven batch workflow of arXiv 2009.02449): it names the axes of the
+cross product and :func:`expand` turns it into a concrete work list of
+:class:`SweepPoint`\\ s.  Every point is self-describing — a point dict
+round-trips through JSON so the engine can ship it to a worker process and
+stamp it into the result store's ``meta`` — and carries a stable content
+hash (:attr:`SweepPoint.key`) that keys both the per-point analysis cache
+and the "newest record per point" grouping at report time.
+
+This module is deliberately jax-free: spawned workers import it before
+choosing their XLA device count (see ``repro.sweep.engine``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Iterable, Mapping, Sequence
+
+from repro.configs.registry import select_many
+
+AMP_POLICIES = ("O0", "O1", "O2")
+
+# smoke preset: the CI-sized campaign (≥ 8 configs, CPU, minutes not hours)
+SMOKE_CONFIGS = 8
+SMOKE_SEQ = 16
+SMOKE_BATCH = 2
+SMOKE_ITERS = 2
+SMOKE_WARMUP = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One fully-resolved cell of the campaign grid."""
+
+    config: str                     # registry name
+    seq: int
+    batch: int                      # global batch (sharded over the data axis)
+    amp: str                        # O0 | O1 | O2
+    mesh: tuple[int, int]           # (data, model) axis sizes; (1, 1) = no mesh
+    machine: str                    # MachineSpec name the bounds are against
+    measured: bool                  # execute + time, or bound-only analytical
+    smoke: bool                     # smoke config variant vs full config
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh[0] * self.mesh[1]
+
+    @property
+    def label(self) -> str:
+        """Human-readable point id (report rows, progress lines)."""
+        mesh = f"m{self.mesh[0]}x{self.mesh[1]}"
+        kind = "" if self.measured else "/analytical"
+        return (f"{self.config}/s{self.seq}b{self.batch}/{self.amp}/"
+                f"{mesh}{kind}")
+
+    @property
+    def key(self) -> str:
+        """Stable content hash: cache key + store grouping key."""
+        payload = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["mesh"] = list(self.mesh)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SweepPoint":
+        kw = dict(d)
+        kw["mesh"] = tuple(kw["mesh"])
+        return cls(**kw)
+
+
+def invalid_reason(point: SweepPoint) -> str | None:
+    """Why a grid cell is not runnable (``None`` = runnable).
+
+    Skipping with a reason beats silently dropping cells: the engine logs
+    every skip so a campaign's coverage is always accountable.
+    """
+    if point.amp not in AMP_POLICIES:
+        return f"unknown AMP policy {point.amp!r}"
+    if point.mesh[0] < 1 or point.mesh[1] < 1:
+        return f"bad mesh {point.mesh}"
+    if point.batch % point.mesh[0]:
+        return (f"global batch {point.batch} not divisible by "
+                f"data axis {point.mesh[0]}")
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """The declarative campaign: axes of the cross product + run policy."""
+
+    name: str = "sweep"
+    configs: tuple[str, ...] = ("all",)          # selectors (registry.select)
+    seqs: tuple[int, ...] = (32,)
+    batches: tuple[int, ...] = (4,)
+    amps: tuple[str, ...] = ("O1",)
+    meshes: tuple[tuple[int, int], ...] = ((1, 1),)
+    machine: str = "cpu-host"
+    measure: bool = True
+    smoke: bool = True                            # smoke config variants
+    iters: int = 3
+    warmup: int = 1
+
+    def expand(self) -> tuple[list[SweepPoint], list[tuple[SweepPoint, str]]]:
+        """(runnable points, skipped (point, reason)) — the work list.
+
+        Order is deterministic: configs outermost (so a partially-completed
+        campaign still covers whole configs), then seq × batch × amp × mesh.
+        """
+        points: list[SweepPoint] = []
+        skipped: list[tuple[SweepPoint, str]] = []
+        for config in select_many(self.configs):
+            for seq in self.seqs:
+                for batch in self.batches:
+                    for amp in self.amps:
+                        for mesh in self.meshes:
+                            p = SweepPoint(
+                                config=config, seq=seq, batch=batch, amp=amp,
+                                mesh=tuple(mesh), machine=self.machine,
+                                measured=self.measure, smoke=self.smoke)
+                            reason = invalid_reason(p)
+                            if reason is None:
+                                points.append(p)
+                            else:
+                                skipped.append((p, reason))
+        return points, skipped
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["meshes"] = [list(m) for m in self.meshes]
+        return json.dumps(d, indent=2)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SweepSpec":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - fields
+        if unknown:
+            raise ValueError(f"unknown sweep-spec keys {sorted(unknown)}; "
+                             f"known: {sorted(fields)}")
+        kw = dict(d)
+        for tup in ("configs", "seqs", "batches", "amps"):
+            if tup in kw:
+                kw[tup] = tuple(kw[tup])
+        if "meshes" in kw:
+            kw["meshes"] = tuple(tuple(m) for m in kw["meshes"])
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SweepSpec":
+        return cls.from_dict(json.loads(text))
+
+
+def parse_mesh(s: str) -> tuple[int, int]:
+    """``"2x4"`` → (2, 4) — (data, model) axis sizes."""
+    parts = s.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"mesh must be DxM (e.g. 1x1, 2x4), got {s!r}")
+    return int(parts[0]), int(parts[1])
+
+
+def parse_int_list(s: str | Iterable[int]) -> tuple[int, ...]:
+    if isinstance(s, str):
+        return tuple(int(x) for x in s.split(",") if x.strip())
+    return tuple(int(x) for x in s)
+
+
+def smoke_spec(n_configs: int = SMOKE_CONFIGS) -> SweepSpec:
+    """The CI campaign: ≥ 8 smoke configs, single-device mesh, measured.
+
+    Uses the first ``n_configs`` assigned archs — in registry order the
+    slice spans dense / MoE-adjacent / hybrid / VLM / audio / SSM families,
+    so even the smoke sweep is a genuinely *cross-architecture* gallery.
+    """
+    from repro.configs.registry import ARCHS
+    return SweepSpec(
+        name="smoke",
+        configs=tuple(ARCHS[:max(1, n_configs)]),
+        seqs=(SMOKE_SEQ,), batches=(SMOKE_BATCH,), amps=("O1",),
+        meshes=((1, 1),), machine="cpu-host", measure=True, smoke=True,
+        iters=SMOKE_ITERS, warmup=SMOKE_WARMUP)
+
+
+def points_by_devices(points: Sequence[SweepPoint]
+                      ) -> dict[int, list[SweepPoint]]:
+    """Group the work list by required device count.
+
+    XLA's host-platform device count is fixed at jax import, so points
+    needing different counts cannot share a process — the engine runs one
+    worker pool per group.
+    """
+    out: dict[int, list[SweepPoint]] = {}
+    for p in points:
+        out.setdefault(p.n_devices, []).append(p)
+    return dict(sorted(out.items()))

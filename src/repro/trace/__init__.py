@@ -27,7 +27,8 @@ from repro.trace.compare import (  # noqa: F401
 )
 from repro.trace.store import (  # noqa: F401
     PHASE_METRICS, SCHEMA_VERSION, TraceRecord, TraceStore, git_sha,
-    host_fingerprint, phase_payload, record_from_phases,
+    host_fingerprint, phase_payload, record_from_payloads,
+    record_from_phases,
 )
 from repro.trace.timeline import (  # noqa: F401
     PhaseSpan, Timeline, ascii_timeline, build_timeline, timeline_from_record,

@@ -48,29 +48,59 @@ DEFAULT_STORE = "benchmarks/results/trace.jsonl"
 # record
 # --------------------------------------------------------------------------
 
-def build_measured_phases(config: str, *, smoke: bool = True, seq: int = 32,
-                          batch: int = 4, amp: str = "O1", seed: int = 0):
-    """(phases, run): fwd / bwd / opt with *concrete* args, ready to both
-    analyze and execute (the measured path needs real buffers anyway)."""
+def build_phase_args(model, run: RunConfig, *, seq: int = 32, batch: int = 4,
+                     seed: int = 0, concrete: bool = True):
+    """fwd / bwd / opt phase programs for a built model:
+    ``{phase: (fn, args)}`` ready for ``repro.core.profiler`` /
+    ``repro.trace.collector``.
+
+    ``concrete=True`` allocates real buffers (the measured path needs them
+    anyway); ``concrete=False`` produces ShapeDtypeStruct trees instead —
+    the analytical path (``repro.sweep`` campaigns) lowers without
+    allocating a single array.
+    """
     from repro.models import api as M
     from repro.models.params import init
     from repro.train import optim
     from repro.train.step import make_phases
 
-    cfg = get_smoke(config) if smoke else get_config(config)
-    run = RunConfig(amp=amp)
-    model = M.build(cfg)
+    cfg = model.cfg
     shape = ShapeSpec("trace", seq, batch, "train")
     fns = make_phases(model, run)
-    params = init(jax.random.PRNGKey(seed), model.spec, run.param_dtype)
-    batch_c = M.synthetic_batch(cfg, shape, batch, seed)
-    grads = jax.tree.map(jnp.zeros_like, params)
-    opt_state = optim.optimizer_init(params, run)
+    if concrete:
+        params = init(jax.random.PRNGKey(seed), model.spec, run.param_dtype)
+        batch_c = M.synthetic_batch(cfg, shape, batch, seed)
+        opt_state = optim.optimizer_init(params, run)
+    else:
+        params = jax.eval_shape(
+            lambda k: init(k, model.spec, run.param_dtype),
+            jax.random.PRNGKey(seed))
+        batch_c = {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt)
+                   in M.batch_schema(cfg, shape, batch).items()}
+        opt_state = jax.eval_shape(
+            lambda p: optim.optimizer_init(p, run), params)
+    grads = jax.tree.map(lambda p: (
+        p if isinstance(p, jax.ShapeDtypeStruct) else jnp.zeros_like(p)),
+        params)
     return {
         "fwd": (fns["fwd"], (params, batch_c)),
         "bwd": (fns["bwd"], (params, batch_c)),
         "opt": (fns["opt"], (params, grads, opt_state)),
-    }, run
+    }
+
+
+def build_measured_phases(config: str, *, smoke: bool = True, seq: int = 32,
+                          batch: int = 4, amp: str = "O1", seed: int = 0,
+                          run: RunConfig | None = None):
+    """(phases, run): fwd / bwd / opt with *concrete* args, ready to both
+    analyze and execute (the measured path needs real buffers anyway)."""
+    from repro.models import api as M
+
+    cfg = get_smoke(config) if smoke else get_config(config)
+    run = run or RunConfig(amp=amp)
+    model = M.build(cfg)
+    return build_phase_args(model, run, seq=seq, batch=batch,
+                            seed=seed), run
 
 
 def scale_measurement(m: PhaseMeasurement, factor: float) -> PhaseMeasurement:
@@ -99,8 +129,14 @@ def cmd_record(args) -> int:
             phases, run = build_measured_phases(
                 name, smoke=not args.full, seq=args.seq, batch=args.batch,
                 amp=args.amp)
+            # dot/conv FLOPs classify onto the AMP policy's compute-dtype
+            # ceiling (CPU bf16 legalization, docs/DESIGN.md §9) — keeps
+            # trace records consistent with repro.sweep / launch.dryrun
+            mm_class = ("bf16" if run.compute_dtype == jnp.bfloat16
+                        else None)
             ms = collect_phases(phases, machine=args.machine,
-                                iters=args.iters, warmup=args.warmup)
+                                iters=args.iters, warmup=args.warmup,
+                                matmul_class=mm_class)
             if args.scale_wall != 1.0:
                 ms = {k: scale_measurement(m, args.scale_wall)
                       for k, m in ms.items()}

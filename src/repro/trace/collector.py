@@ -43,6 +43,7 @@ class KernelMeasurement:
     attributed_s: float             # share of the measured wall time
     achieved_flops_per_s: float     # flops / attributed_s
     pct_of_roofline: float          # bound_s / attributed_s  (1.0 = at bound)
+    vmem_bytes: float = 0.0         # total internal (VMEM-level) traffic
 
 
 @dataclasses.dataclass
@@ -57,6 +58,7 @@ class PhaseMeasurement:
     kernels: list[KernelMeasurement]
     flops: float                    # per-device HLO FLOPs
     hbm_bytes: float
+    vmem_bytes: float = 0.0         # per-device internal (VMEM-level) bytes
 
     @property
     def achieved_flops_per_s(self) -> float:
@@ -125,7 +127,8 @@ def attribute_time(analysis: ModuleAnalysis, machine: MachineSpec,
             if rec.total_hbm_bytes else 0.0,
             bound_s=bound, attributed_s=t_attr,
             achieved_flops_per_s=rec.total_flops / t_attr if t_attr else 0.0,
-            pct_of_roofline=bound / t_attr if t_attr else 0.0))
+            pct_of_roofline=bound / t_attr if t_attr else 0.0,
+            vmem_bytes=rec.total_vmem_bytes))
     out.sort(key=lambda k: -k.attributed_s)
     return out
 
@@ -152,7 +155,8 @@ def measurement_from_profile(res: ProfileResult,
         machine=machine.name, terms=res.terms,
         kernels=attribute_time(res.analysis, machine, res.wall_s),
         flops=res.analysis.total_flops,
-        hbm_bytes=res.analysis.total_hbm_bytes)
+        hbm_bytes=res.analysis.total_hbm_bytes,
+        vmem_bytes=res.analysis.total_vmem_bytes)
 
 
 def collect_phase(name: str, fn: Callable, args: Sequence[Any], *,

@@ -115,9 +115,12 @@ def phase_payload(m: PhaseMeasurement, top_kernels: int = 8
         "dominant": m.dominant,
         "flops": m.flops,
         "hbm_bytes": m.hbm_bytes,
+        "vmem_bytes": m.vmem_bytes,
         "kernels": [
             {"name": k.name, "category": k.category,
+             "exec_count": k.exec_count,
              "flops": k.flops, "hbm_bytes": k.hbm_bytes,
+             "vmem_bytes": k.vmem_bytes,
              "ai_hbm": k.ai_hbm, "bound_s": k.bound_s,
              "attributed_s": k.attributed_s,
              "achieved_flops_per_s": k.achieved_flops_per_s,
@@ -127,12 +130,17 @@ def phase_payload(m: PhaseMeasurement, top_kernels: int = 8
     }
 
 
-def record_from_phases(config: str,
-                       measurements: Mapping[str, PhaseMeasurement],
-                       machine: str,
-                       mesh: Mapping[str, int] | None = None,
-                       meta: Mapping[str, Any] | None = None,
-                       top_kernels: int = 8) -> TraceRecord:
+def record_from_payloads(config: str,
+                         phases: Mapping[str, Mapping[str, Any]],
+                         machine: str,
+                         mesh: Mapping[str, int] | None = None,
+                         meta: Mapping[str, Any] | None = None) -> TraceRecord:
+    """TraceRecord from already-serialized phase payloads.
+
+    The construction path shared by ``record_from_phases`` (live
+    measurements) and ``repro.sweep`` (cached / analytical payloads):
+    provenance stamping happens in exactly one place.
+    """
     return TraceRecord(
         schema_version=SCHEMA_VERSION,
         run_id=uuid.uuid4().hex[:12],
@@ -142,9 +150,21 @@ def record_from_phases(config: str,
         machine=machine,
         mesh=dict(mesh or {}),
         host=host_fingerprint(),
-        phases={name: phase_payload(m, top_kernels)
-                for name, m in measurements.items()},
+        phases={name: dict(p) for name, p in phases.items()},
         meta=dict(meta or {}))
+
+
+def record_from_phases(config: str,
+                       measurements: Mapping[str, PhaseMeasurement],
+                       machine: str,
+                       mesh: Mapping[str, int] | None = None,
+                       meta: Mapping[str, Any] | None = None,
+                       top_kernels: int = 8) -> TraceRecord:
+    return record_from_payloads(
+        config,
+        {name: phase_payload(m, top_kernels)
+         for name, m in measurements.items()},
+        machine=machine, mesh=mesh, meta=meta)
 
 
 class TraceStore:
@@ -203,6 +223,11 @@ class TraceStore:
         for rec in self.records():
             seen.setdefault(rec.config)
         return list(seen)
+
+    def records_where(self, predicate) -> list["TraceRecord"]:
+        """Readable records matching ``predicate(rec)``, oldest first
+        (e.g. ``lambda r: r.meta.get("sweep") == name``)."""
+        return [rec for rec in self.records() if predicate(rec)]
 
 
 def iter_jsonl(path: str) -> Iterable[dict]:

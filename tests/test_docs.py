@@ -1,0 +1,43 @@
+"""Docs-consistency gate (tools/check_docs.py) runs as a tier-1 test too:
+every path and every ``python -m`` CLI quoted in README/docs must exist.
+The same check runs in CI as its own step; having it here means a renamed
+module fails `pytest` locally before a PR is ever pushed."""
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECKER = os.path.join(REPO_ROOT, "tools", "check_docs.py")
+
+
+def _load_checker():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location("check_docs", CHECKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_are_consistent():
+    proc = subprocess.run([sys.executable, CHECKER], cwd=REPO_ROOT,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr or proc.stdout
+
+
+def test_checker_flags_stale_path(tmp_path):
+    mod = _load_checker()
+    doc = tmp_path / "stale.md"
+    doc.write_text("see `src/repro/does_not_exist.py` for details\n")
+    problems = mod.check_paths(str(doc), doc.read_text())
+    assert problems and "does not exist" in problems[0]
+
+
+def test_checker_flags_broken_cli(tmp_path):
+    mod = _load_checker()
+    doc = tmp_path / "stale.md"
+    doc.write_text("run `python -m repro.no_such_module --flag`\n")
+    mods = mod.quoted_modules({str(doc): doc.read_text()})
+    assert "repro.no_such_module" in mods
+    problems = mod.check_modules(mods)
+    assert problems and "repro.no_such_module" in problems[0]

@@ -1,0 +1,335 @@
+"""repro.sweep subsystem tests: spec expansion + selectors, point hashing,
+engine execution (measured + analytical + cache), store persistence /
+meta stamping, cross-config aggregation + ranking, and the CLI run→report
+loop — all CPU-only, inline workers (no process pool under pytest)."""
+
+import json
+import os
+
+import pytest
+
+from repro.configs.registry import ARCHS, select, select_many
+from repro.core.report import sweep_table
+from repro.sweep.spec import (SweepPoint, SweepSpec, invalid_reason,
+                              parse_mesh, points_by_devices, smoke_spec)
+
+
+class TestSelectors:
+    def test_all(self):
+        assert select("all") == ARCHS
+
+    def test_family(self):
+        ssm = select("family:ssm")
+        assert ssm and all(a in ARCHS for a in ssm)
+
+    def test_exact_name(self):
+        assert select("minitron-4b") == ("minitron-4b",)
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown arch"):
+            select("nope")
+        with pytest.raises(KeyError, match="family"):
+            select("family:nope")
+
+    def test_select_many_dedupes_in_order(self):
+        got = select_many(["minitron-4b", "family:ssm", "minitron-4b"])
+        assert got[0] == "minitron-4b"
+        assert len(got) == len(set(got))
+
+
+class TestSpec:
+    def test_expand_cross_product(self):
+        spec = SweepSpec(configs=("minitron-4b", "mamba2-1.3b"),
+                         seqs=(16, 32), batches=(2,), amps=("O0", "O1"),
+                         meshes=((1, 1),))
+        points, skipped = spec.expand()
+        assert len(points) == 2 * 2 * 2 and not skipped
+        # configs outermost: a partial campaign covers whole configs
+        assert [p.config for p in points[:4]] == ["minitron-4b"] * 4
+
+    def test_invalid_cells_skipped_with_reason(self):
+        spec = SweepSpec(configs=("minitron-4b",), batches=(3,),
+                         meshes=((2, 1),))
+        points, skipped = spec.expand()
+        assert not points and len(skipped) == 1
+        assert "not divisible" in skipped[0][1]
+        assert invalid_reason(skipped[0][0])
+
+    def test_point_key_stable_and_distinct(self):
+        spec = SweepSpec(configs=("minitron-4b",), amps=("O0", "O1"))
+        points, _ = spec.expand()
+        keys = {p.key for p in points}
+        assert len(keys) == len(points)
+        assert points[0].key == SweepPoint.from_dict(
+            points[0].to_dict()).key
+
+    def test_spec_json_round_trip(self):
+        spec = SweepSpec(name="x", configs=("family:ssm",),
+                         meshes=((1, 1), (2, 2)))
+        assert SweepSpec.from_json(spec.to_json()) == spec
+
+    def test_unknown_spec_key_rejected(self):
+        with pytest.raises(ValueError, match="unknown sweep-spec keys"):
+            SweepSpec.from_dict({"nope": 1})
+
+    def test_parse_mesh(self):
+        assert parse_mesh("2x4") == (2, 4)
+        with pytest.raises(ValueError):
+            parse_mesh("2x4x8")
+
+    def test_smoke_spec_covers_at_least_8_configs(self):
+        spec = smoke_spec()
+        points, skipped = spec.expand()
+        assert len(points) >= 8 and not skipped
+        assert all(p.measured and p.n_devices == 1 for p in points)
+
+    def test_points_by_devices(self):
+        spec = SweepSpec(configs=("minitron-4b",), batches=(2,),
+                         meshes=((1, 1), (2, 1), (1, 2)))
+        points, _ = spec.expand()
+        groups = points_by_devices(points)
+        assert set(groups) == {1, 2}
+        assert len(groups[2]) == 2
+
+
+@pytest.fixture(scope="module")
+def sweep_store(tmp_path_factory):
+    """One measured + one analytical campaign into a shared tmp store."""
+    from repro.sweep.engine import run_sweep
+    d = tmp_path_factory.mktemp("sweep")
+    store_path = str(d / "sweep.jsonl")
+    cache_dir = str(d / "cache")
+    measured = SweepSpec(name="t-meas", configs=("minitron-4b",),
+                         seqs=(16,), batches=(2,), amps=("O1",),
+                         meshes=((1, 1),), measure=True, iters=2, warmup=1)
+    res_m = run_sweep(measured, store_path=store_path, workers=0,
+                      cache_dir=None)
+    analytical = SweepSpec(name="t-an", configs=("minitron-4b",),
+                           seqs=(16,), batches=(2,), amps=("O1",),
+                           meshes=((1, 1),), measure=False)
+    res_a1 = run_sweep(analytical, store_path=store_path, workers=0,
+                       cache_dir=cache_dir)
+    res_a2 = run_sweep(analytical, store_path=store_path, workers=0,
+                       cache_dir=cache_dir)
+    return store_path, res_m, res_a1, res_a2
+
+
+class TestEngine:
+    def test_measured_point_persists_record(self, sweep_store):
+        from repro.trace.store import SCHEMA_VERSION, TraceStore
+        store_path, res_m, _, _ = sweep_store
+        assert res_m.n_ok == 1 and not res_m.n_failed
+        recs = TraceStore(store_path).records("minitron-4b")
+        rec = recs[0]
+        assert rec.schema_version == SCHEMA_VERSION
+        assert set(rec.phases) == {"fwd", "bwd", "opt"}
+        assert rec.meta["sweep"] == "t-meas"
+        assert rec.meta["sweep_point"] == res_m.results[0].point.key
+        assert rec.mesh == {"data": 1, "model": 1}
+        for p in rec.phases.values():
+            assert p["wall_s"] > 0
+            assert p["achieved_flops_per_s"] > 0
+            assert p["vmem_bytes"] >= p["hbm_bytes"] > 0
+
+    def test_analytical_point_bound_only(self, sweep_store):
+        from repro.sweep.aggregate import sweep_records
+        from repro.trace.store import TraceStore
+        store_path, _, res_a1, _ = sweep_store
+        assert res_a1.n_ok == 1 and res_a1.n_cached == 0
+        recs = sweep_records(TraceStore(store_path), "t-an")
+        for p in recs[0].phases.values():
+            assert p["wall_s"] == 0.0
+            assert p["bound_overlap_s"] > 0
+            assert p["kernels"], "top kernels persisted for the gallery"
+
+    def test_analytical_rerun_hits_cache(self, sweep_store):
+        _, _, _, res_a2 = sweep_store
+        assert res_a2.n_ok == 1 and res_a2.n_cached == 1
+        assert res_a2.results[0].run_id, "cached point still stores a record"
+
+    def test_inline_multi_device_point_rejected(self):
+        import jax
+
+        from repro.sweep.engine import run_point
+        if jax.device_count() > 1:       # pragma: no cover
+            pytest.skip("host actually has multiple devices")
+        point = SweepPoint(config="minitron-4b", seq=16, batch=2, amp="O1",
+                           mesh=(2, 1), machine="cpu-host", measured=False,
+                           smoke=True)
+        with pytest.raises(RuntimeError, match="worker pool"):
+            run_point(point)
+
+    def test_failed_point_reported_not_raised(self, tmp_path):
+        from repro.sweep.engine import run_sweep
+        bad = SweepSpec(name="t-bad", configs=("minitron-4b",),
+                        seqs=(16,), batches=(2,), amps=("O9",),
+                        meshes=((1, 1),))
+        points, skipped = bad.expand()
+        assert not points and skipped     # bad AMP filtered at expand time
+        result = run_sweep(bad, store_path=str(tmp_path / "s.jsonl"),
+                           workers=0, cache_dir=None)
+        assert result.n_ok == result.n_failed == 0
+
+
+class TestAggregate:
+    def test_latest_per_point_and_ranking(self, sweep_store):
+        from repro.sweep.aggregate import (latest_per_point, render_summary,
+                                           summary_rows, sweep_records)
+        from repro.trace.store import TraceStore
+        store_path, *_ = sweep_store
+        store = TraceStore(store_path)
+        recs = latest_per_point(sweep_records(store))
+        # measured point + analytical point (2 analytical runs collapse)
+        assert len(recs) == 2
+        rows = summary_rows(recs)
+        measured = [r for r in rows if r["measured"]]
+        analytical = [r for r in rows if not r["measured"]]
+        assert len(measured) == len(analytical) == 1
+        assert measured[0]["pct_of_roofline"] > 0
+        assert analytical[0]["pct_of_roofline"] == 0.0
+        table = render_summary(recs)
+        # measured ranks above bound-only rows
+        first_row = table.splitlines()[1]
+        assert first_row.lstrip().startswith("1 ")
+        assert "analytical" not in first_row
+        assert "1 measured, 1 analytical" in table
+
+    def test_name_filter(self, sweep_store):
+        from repro.sweep.aggregate import sweep_records
+        from repro.trace.store import TraceStore
+        store_path, *_ = sweep_store
+        store = TraceStore(store_path)
+        assert len(sweep_records(store, "t-meas")) == 1
+        assert len(sweep_records(store, "t-an")) == 2
+        assert sweep_records(store, "nope") == []
+
+    def test_gallery_renders_charts(self, sweep_store):
+        from repro.sweep.aggregate import (gallery, latest_per_point,
+                                           sweep_records)
+        from repro.trace.store import TraceStore
+        store_path, *_ = sweep_store
+        recs = latest_per_point(sweep_records(TraceStore(store_path)))
+        out = gallery(recs, max_charts=2)
+        assert "minitron-4b" in out and "AI=" in out
+        assert "*" in out, "measured achieved overlay present"
+
+    def test_sweep_table_handles_empty_and_orders(self):
+        rows = [
+            {"label": "slow", "measured": True, "wall_s": 1.0,
+             "bound_overlap_s": 0.1, "achieved_flops_per_s": 1e9,
+             "pct_of_roofline": 0.1, "hbm_frac": 0.1, "vmem_frac": 0.05,
+             "dominant": "memory"},
+            {"label": "fast", "measured": True, "wall_s": 0.2,
+             "bound_overlap_s": 0.1, "achieved_flops_per_s": 5e9,
+             "pct_of_roofline": 0.5, "hbm_frac": 0.5, "vmem_frac": 0.2,
+             "dominant": "compute"},
+            {"label": "an", "measured": False, "wall_s": 0.0,
+             "bound_overlap_s": 0.3, "achieved_flops_per_s": 0.0,
+             "pct_of_roofline": 0.0, "hbm_frac": 0.0, "vmem_frac": 0.0,
+             "dominant": "memory"},
+        ]
+        out = sweep_table(rows)
+        lines = out.splitlines()
+        assert lines[1].split()[1] == "fast"      # best %roof first
+        assert lines[2].split()[1] == "slow"
+        assert lines[3].split()[1] == "an"        # analytical last
+        assert sweep_table([]).startswith("  #")
+
+
+class TestCli:
+    def test_run_then_report(self, tmp_path, capsys):
+        from repro.sweep.cli import main
+        store = str(tmp_path / "sweep.jsonl")
+        rc = main(["run", "--configs", "minitron-4b", "--seq", "16",
+                   "--batch", "2", "--name", "clitest", "--workers", "0",
+                   "--iters", "2", "--warmup", "1", "--store", store,
+                   "--no-cache"])
+        out = capsys.readouterr().out
+        assert rc == 0, out
+        assert "[ok] minitron-4b" in out and "%roof" in out
+        rc = main(["report", "--store", store, "--name", "clitest",
+                   "--charts", "1"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "ranked by %-of-roofline" in out and "AI=" in out
+
+    def test_report_empty_store_errors(self, tmp_path, capsys):
+        from repro.sweep.cli import main
+        rc = main(["report", "--store", str(tmp_path / "none.jsonl")])
+        assert rc == 2
+        assert "no records" in capsys.readouterr().err
+
+    def test_bad_input_is_message_not_traceback(self, tmp_path, capsys):
+        from repro.sweep.cli import main
+        rc = main(["run", "--configs", "nope",
+                   "--store", str(tmp_path / "s.jsonl")])
+        assert rc == 2
+        assert "unknown arch" in capsys.readouterr().err
+        rc = main(["run", "--mesh", "2x4x8",
+                   "--store", str(tmp_path / "s.jsonl")])
+        assert rc == 2
+        assert "DxM" in capsys.readouterr().err
+        rc = main(["run", "--spec", str(tmp_path / "missing.json"),
+                   "--store", str(tmp_path / "s.jsonl")])
+        assert rc == 2
+
+    def test_spec_file_round_trip(self, tmp_path, capsys):
+        from repro.sweep.cli import main
+        spec = SweepSpec(name="fromfile", configs=("minitron-4b",),
+                         seqs=(16,), batches=(2,), amps=("O1",),
+                         meshes=((1, 1),), measure=False)
+        path = tmp_path / "spec.json"
+        path.write_text(spec.to_json())
+        store = str(tmp_path / "s.jsonl")
+        rc = main(["run", "--spec", str(path), "--workers", "0",
+                   "--store", store, "--cache-dir",
+                   str(tmp_path / "cache")])
+        assert rc == 0, capsys.readouterr().out
+        from repro.sweep.aggregate import sweep_records
+        from repro.trace.store import TraceStore
+        assert len(sweep_records(TraceStore(store), "fromfile")) == 1
+
+    def test_axis_flags_conflict_with_smoke_and_spec(self, tmp_path,
+                                                     capsys):
+        from repro.sweep.cli import main
+        with pytest.raises(SystemExit) as e:
+            main(["run", "--smoke", "--configs", "minitron-4b"])
+        assert e.value.code == 2
+        assert "conflict" in capsys.readouterr().err
+        path = tmp_path / "spec.json"
+        path.write_text(SweepSpec(configs=("minitron-4b",)).to_json())
+        with pytest.raises(SystemExit) as e:
+            main(["run", "--spec", str(path), "--mesh", "2x2"])
+        assert e.value.code == 2
+
+    def test_policy_knobs_apply_on_top_of_spec_file(self, tmp_path,
+                                                    capsys):
+        from repro.sweep.cli import main
+        spec = SweepSpec(name="base", configs=("minitron-4b",),
+                         seqs=(16,), batches=(2,), measure=True)
+        path = tmp_path / "spec.json"
+        path.write_text(spec.to_json())
+        store = str(tmp_path / "s.jsonl")
+        rc = main(["run", "--spec", str(path), "--no-measure",
+                   "--name", "ontop", "--workers", "0", "--store", store,
+                   "--no-cache"])
+        assert rc == 0, capsys.readouterr().out
+        from repro.sweep.aggregate import sweep_records
+        from repro.trace.store import TraceStore
+        recs = sweep_records(TraceStore(store), "ontop")
+        assert len(recs) == 1
+        assert recs[0].meta["measured"] is False, \
+            "--no-measure must override the spec file"
+
+    def test_cache_dir_written(self, tmp_path):
+        from repro.sweep.cli import main
+        cache = tmp_path / "cache"
+        rc = main(["run", "--configs", "mamba2-1.3b", "--seq", "16",
+                   "--batch", "2", "--no-measure", "--workers", "0",
+                   "--store", str(tmp_path / "s.jsonl"),
+                   "--cache-dir", str(cache)])
+        assert rc == 0
+        entries = [f for f in os.listdir(cache) if f.endswith(".json")]
+        assert entries, "analytical payloads cached per point"
+        payload = json.loads((cache / entries[0]).read_text())
+        assert set(payload) == {"fwd", "bwd", "opt"}

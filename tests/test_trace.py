@@ -333,6 +333,68 @@ class TestCliEndToEnd:
         assert "!" in capsys.readouterr().out
 
 
+class TestCliErrorPaths:
+    """The non-happy branches of every ``repro.trace`` subcommand exit
+    non-zero with a message instead of silently doing nothing."""
+
+    def test_record_without_config_errors(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        rc = main(["record", "--store", str(tmp_path / "t.jsonl")])
+        assert rc == 2
+        assert "--config" in capsys.readouterr().err
+
+    def test_record_failure_exits_nonzero(self, tmp_path, capsys,
+                                          monkeypatch):
+        import repro.trace.cli as cli
+        monkeypatch.setattr(cli, "build_measured_phases",
+                            lambda *a, **k: 1 / 0)
+        rc = cli.main(["record", "--config", "minitron-4b", "--store",
+                       str(tmp_path / "t.jsonl")])
+        assert rc == 1
+        assert "[FAIL] minitron-4b" in capsys.readouterr().err
+
+    def test_compare_base_without_new_errors(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        rc = main(["compare", "--store", str(tmp_path / "t.jsonl"),
+                   "--base", "abc"])
+        assert rc == 2
+        assert "go together" in capsys.readouterr().err
+
+    def test_compare_unknown_run_id_errors(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        store = TraceStore(str(tmp_path / "t.jsonl"))
+        store.append(record_from_phases("a", {"fwd": _measurement()},
+                                        machine="cpu-host"))
+        rc = main(["compare", "--store", store.path,
+                   "--base", "nope", "--new", "alsonope"])
+        assert rc == 2
+        assert "not found" in capsys.readouterr().err
+
+    def test_compare_single_run_is_clean_exit(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        store = TraceStore(str(tmp_path / "t.jsonl"))
+        store.append(record_from_phases("a", {"fwd": _measurement()},
+                                        machine="cpu-host"))
+        rc = main(["compare", "--store", store.path])
+        assert rc == 0                      # nothing comparable != regression
+        assert "no cells" in capsys.readouterr().out
+
+    def test_report_empty_store_errors(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        rc = main(["report", "--store", str(tmp_path / "absent.jsonl")])
+        assert rc == 2
+        assert "no records" in capsys.readouterr().err
+
+    def test_report_unknown_config_errors(self, tmp_path, capsys):
+        from repro.trace.cli import main
+        store = TraceStore(str(tmp_path / "t.jsonl"))
+        store.append(record_from_phases("a", {"fwd": _measurement()},
+                                        machine="cpu-host"))
+        rc = main(["report", "--store", store.path, "--config", "missing"])
+        assert rc == 2
+        assert "no records" in capsys.readouterr().err
+
+
 class TestMeasuredProfile:
     """profile_fn(measure=True) drives the same compiled object."""
 

@@ -1,0 +1,118 @@
+"""Docs-consistency check: what the docs quote must exist in the repo.
+
+Scans README.md and docs/*.md for
+
+* repo-relative path references (``src/...``, ``benchmarks/...``,
+  ``docs/...``, ``examples/...``, ``tools/...``, ``tests/...``) — each
+  must resolve to an existing file or directory (``path:line`` column
+  suffixes are stripped; generated artifacts like
+  ``benchmarks/results/*`` are exempt);
+* ``python -m <module>`` invocations — each distinct module must answer
+  ``--help`` with exit status 0 (run with ``PYTHONPATH=src`` from the
+  repo root).
+
+Exit status 0 = consistent; 1 = stale references (each printed).  Run by
+CI so a renamed module or deleted file fails the build instead of rotting
+in the docs.  Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [doc.md ...]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_DOCS = ("README.md", "docs")
+
+_PATH_RE = re.compile(
+    r"\b((?:src|benchmarks|docs|examples|tools|tests)/[\w./\-]*\w)")
+_MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z_]\w*(?:\.\w+)*)")
+
+# paths created at run time, legitimately quoted before they exist
+_GENERATED = ("benchmarks/results/",)
+
+
+def doc_files(args: list[str]) -> list[str]:
+    targets = args or [os.path.join(REPO_ROOT, d) for d in DEFAULT_DOCS]
+    out = []
+    for t in targets:
+        if os.path.isdir(t):
+            out.extend(os.path.join(t, f) for f in sorted(os.listdir(t))
+                       if f.endswith(".md"))
+        else:
+            out.append(t)
+    return out
+
+
+def check_paths(doc: str, text: str) -> list[str]:
+    problems = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        for m in _PATH_RE.finditer(line):
+            path = m.group(1).rstrip(".")
+            path = path.split(":")[0]               # strip :line suffixes
+            if any(path.startswith(g) for g in _GENERATED):
+                continue
+            if not os.path.exists(os.path.join(REPO_ROOT, path)):
+                problems.append(
+                    f"{os.path.relpath(doc, REPO_ROOT)}:{ln}: "
+                    f"path {path!r} does not exist")
+    return problems
+
+
+def quoted_modules(docs: dict[str, str]) -> dict[str, str]:
+    """{module: first 'doc:line' that quotes it}."""
+    out: dict[str, str] = {}
+    for doc, text in docs.items():
+        for ln, line in enumerate(text.splitlines(), 1):
+            for m in _MODULE_RE.finditer(line):
+                out.setdefault(
+                    m.group(1),
+                    f"{os.path.relpath(doc, REPO_ROOT)}:{ln}")
+    return out
+
+
+def check_modules(modules: dict[str, str]) -> list[str]:
+    problems = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    for mod, where in sorted(modules.items()):
+        proc = subprocess.run(
+            [sys.executable, "-m", mod, "--help"], cwd=REPO_ROOT, env=env,
+            capture_output=True, text=True, timeout=120)
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-1:]
+            problems.append(
+                f"{where}: `python -m {mod} --help` exited "
+                f"{proc.returncode} ({' '.join(tail)})")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    files = doc_files(list(argv or sys.argv[1:]))
+    docs = {}
+    for f in files:
+        with open(f) as fh:
+            docs[f] = fh.read()
+    problems: list[str] = []
+    for doc, text in docs.items():
+        problems.extend(check_paths(doc, text))
+    problems.extend(check_modules(quoted_modules(docs)))
+    if problems:
+        print(f"check_docs: {len(problems)} stale reference(s):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    n_mod = len(quoted_modules(docs))
+    print(f"check_docs: OK ({len(docs)} doc(s), {n_mod} CLI module(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
