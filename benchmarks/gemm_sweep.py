@@ -33,13 +33,18 @@ def main() -> list[Row]:
                  str(perfs[-1] > perfs[0])))
 
     # Pallas kernel correctness at one size (the WMMA analogue: our own
-    # blocked kernel vs the library path)
+    # blocked kernel vs the library path), run with the tuned winner for
+    # this shape when the tune store has one (default 256³ tiles else)
+    from repro.tune import config_source
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (256, 256), jnp.float32)
     b = jax.random.normal(key, (256, 256), jnp.float32)
-    out = gemm.matmul(a, b, block_m=128, block_n=128, block_k=128)
+    source, cfg = config_source("ert_gemm", (256, 256, 256))
+    out = gemm.matmul(a, b, config=cfg)
     err = float(jnp.max(jnp.abs(out - ref.matmul_ref(a, b))))
     rows.append(("gemm_sweep/pallas_vs_ref_maxerr", 0.0, f"{err:.2e}"))
+    rows.append(("gemm_sweep/pallas_config", 0.0,
+                 f"{source}:{cfg.label()}"))
     return rows
 
 

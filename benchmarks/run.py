@@ -2,12 +2,17 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only <name>] [--list]``
 prints ``name,us_per_call,derived`` CSV rows; exits non-zero if any
-suite raised.
+suite raised.  Every run also lands a machine-readable
+``benchmarks/results/BENCH_<timestamp>.json`` (suite → rows + wall
+seconds) so the perf trajectory is recorded run-over-run — CI uploads it
+as an artifact; ``--json-dir ''`` disables.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -26,7 +31,35 @@ SUITES = (
     "train_throughput",  # operational: measured smoke train steps
     "trace_smoke",       # repro.trace: record→store→compare loop
     "sweep_smoke",       # repro.sweep: campaign→store→report loop + cache
+    "tune_smoke",        # repro.tune: search→store→hit loop
 )
+
+DEFAULT_JSON_DIR = "benchmarks/results"
+
+
+def write_json(json_dir: str, results: dict[str, dict]) -> str:
+    """Persist one run's rows: ``BENCH_<utc timestamp>.json``."""
+    os.makedirs(json_dir, exist_ok=True)
+    stamp = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    path = os.path.join(json_dir, f"BENCH_{stamp}.json")
+    doc = {
+        "schema_version": 1,
+        "timestamp": time.time(),
+        "suites": {
+            name: {
+                "ok": r["ok"],
+                "wall_s": r["wall_s"],
+                "rows": [{"name": n, "us_per_call": us, "derived": d}
+                         for n, us, d in r["rows"]],
+            }
+            for name, r in results.items()
+        },
+    }
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+    return path
 
 
 def main(argv=None) -> int:
@@ -35,6 +68,9 @@ def main(argv=None) -> int:
                     help="run a single suite (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="print suite names and exit")
+    ap.add_argument("--json-dir", default=DEFAULT_JSON_DIR,
+                    help="where BENCH_<timestamp>.json lands "
+                         f"(default {DEFAULT_JSON_DIR}; '' disables)")
     args = ap.parse_args(argv)
     if args.list:
         for name in SUITES:
@@ -47,6 +83,7 @@ def main(argv=None) -> int:
             print(f"  {name}", file=sys.stderr)
         return 2
     failures = 0
+    results: dict[str, dict] = {}
     for name in SUITES:
         if args.only and name != args.only:
             continue
@@ -58,10 +95,17 @@ def main(argv=None) -> int:
             failures += 1
             print(f"{name},0.0,ERROR")
             traceback.print_exc()
+            results[name] = {"ok": False, "wall_s": time.time() - t0,
+                             "rows": []}
             continue
         emit(rows)
-        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+        wall = time.time() - t0
+        results[name] = {"ok": True, "wall_s": wall, "rows": rows}
+        print(f"# {name}: {len(rows)} rows in {wall:.1f}s",
               file=sys.stderr)
+    if args.json_dir and results:
+        path = write_json(args.json_dir, results)
+        print(f"# results -> {path}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -1,0 +1,44 @@
+"""repro.tune smoke: search → store → hit loop on a tiny space.
+
+Exercises the whole autotuner round trip the way CI needs it proven:
+
+1. a smoke-space search over the triad and ERT GEMM kernels persists
+   winners into a fresh store,
+2. a second search over the same space is a 100% store hit (no timing),
+3. the winners' before/after (default vs tuned wall) is reported.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import Row
+
+
+def main() -> list[Row]:
+    from repro.tune import TuneStore, search
+
+    rows: list[Row] = []
+    with tempfile.TemporaryDirectory() as td:
+        store = TuneStore(os.path.join(td, "tune.json"))
+        for kernel in ("triad", "ert_gemm"):
+            first = search(kernel, store=store, smoke=True)
+            assert not first.cached
+            params = ";".join(f"{k}={v}" for k, v in
+                              sorted(first.record.params.items()))
+            rows.append((f"tune_smoke/{kernel}_best",
+                         first.record.wall_s * 1e6, params))
+            rows.append((f"tune_smoke/{kernel}_default",
+                         first.record.default_wall_s * 1e6,
+                         f"speedup={first.speedup:.2f}x"))
+            second = search(kernel, store=store, smoke=True)
+            assert second.cached and not second.candidates
+            rows.append((f"tune_smoke/{kernel}_second_search", 0.0,
+                         "store_hit"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

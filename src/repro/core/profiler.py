@@ -144,10 +144,15 @@ def materialize_args(args: Sequence[Any]) -> tuple:
                  for a in args)
 
 
-def time_compiled(compiled, args: Sequence[Any], *, iters: int = 10,
-                  warmup: int = 3,
-                  donate_argnums: tuple[int, ...] = ()) -> float:
-    """Median wall-clock seconds per call of a compiled executable.
+def time_samples(compiled, args: Sequence[Any], *, iters: int = 10,
+                 warmup: int = 3,
+                 donate_argnums: tuple[int, ...] = ()) -> list[float]:
+    """Per-iteration wall-clock seconds of a compiled executable.
+
+    The raw-sample view behind :func:`time_compiled`; callers that want a
+    different reducer (the autotuner ranks candidates on min-of-samples,
+    the standard best-case discipline — system noise only ever adds time)
+    take the list and fold it themselves.
 
     Donated arguments are consumed by each call, so they are re-copied
     *outside* the timed region every iteration (the copy is synced before
@@ -175,7 +180,16 @@ def time_compiled(compiled, args: Sequence[Any], *, iters: int = 10,
         out = compiled(*a)
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
-    return statistics.median(times)
+    return times
+
+
+def time_compiled(compiled, args: Sequence[Any], *, iters: int = 10,
+                  warmup: int = 3,
+                  donate_argnums: tuple[int, ...] = ()) -> float:
+    """Median wall-clock seconds per call of a compiled executable."""
+    return statistics.median(time_samples(
+        compiled, args, iters=iters, warmup=warmup,
+        donate_argnums=donate_argnums))
 
 
 def profile_fn(fn: Callable, *, args: Sequence[Any],

@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK = 4096  # elements per grid step; multiple of the 8x128 VPU tile
+from repro.kernels import config as kc
+
+BLOCK = 4096  # default elements per grid step; multiple of the 8x128 VPU tile
 
 
 def _fma_chain_kernel(x_ref, o_ref, *, n_iters: int, ilp: int):
@@ -43,20 +45,33 @@ def _fma_chain_kernel(x_ref, o_ref, *, n_iters: int, ilp: int):
     o_ref[...] = out
 
 
-def fma_chain(x: jax.Array, n_iters: int = 64, ilp: int = 4,
+def fma_chain(x: jax.Array, n_iters: int = 64, ilp: int = 4, *,
+              config: kc.KernelConfig | None = None,
+              block: int | None = None,
               interpret: bool = True) -> jax.Array:
-    """Run the FLOP micro-kernel; FLOPs = (2·n_iters·ilp + ilp) · x.size."""
+    """Run the FLOP micro-kernel; FLOPs = (2·n_iters·ilp + ilp) · x.size.
+
+    The block size comes from the config (tunable); any ``x.size`` works —
+    the final block is padded and the pad sliced off after the call.
+    """
+    cfg = kc.resolve("fma_chain", config, block=block)
+    blk = int(cfg.get("block"))
     n = x.size
-    assert n % BLOCK == 0, f"size {n} must tile by {BLOCK}"
+    xf = x.reshape(-1)
+    pad = (-n) % blk
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
     kernel = functools.partial(_fma_chain_kernel, n_iters=n_iters, ilp=ilp)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(n // BLOCK,),
-        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=((n + pad) // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), x.dtype),
+        compiler_params=kc.compiler_params(cfg),
         interpret=interpret,
-    )(x.reshape(-1)).reshape(x.shape)
+    )(xf)
+    return out[:n].reshape(x.shape)
 
 
 def fma_flops(n_elements: int, n_iters: int, ilp: int) -> float:

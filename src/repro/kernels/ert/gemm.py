@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import config as kc
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -33,15 +35,25 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
-           block_n: int = 256, block_k: int = 256,
+def matmul(a: jax.Array, b: jax.Array, *,
+           config: kc.KernelConfig | None = None,
+           block_m: int | None = None, block_n: int | None = None,
+           block_k: int | None = None,
            out_dtype=None, interpret: bool = True) -> jax.Array:
-    """C = A @ B with (bm, bn, bk) VMEM tiles; MXU-aligned blocks."""
+    """C = A @ B with (bm, bn, bk) VMEM tiles; MXU-aligned blocks.
+
+    Tile sizes resolve explicit kwargs → ``config`` → the tuner default
+    (256³); the i/j grid dims are ``parallel``, the accumulating k dim
+    ``arbitrary`` (sequential — the VMEM scratch carries across it).
+    """
+    cfg = kc.resolve("ert_gemm", config, block_m=block_m, block_n=block_n,
+                     block_k=block_k)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
-    block_m, block_n, block_k = (min(block_m, m), min(block_n, n),
-                                 min(block_k, k))
+    block_m, block_n, block_k = (min(int(cfg.get("block_m")), m),
+                                 min(int(cfg.get("block_n")), n),
+                                 min(int(cfg.get("block_k")), k))
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     k_steps = k // block_k
     out_dtype = out_dtype or a.dtype
@@ -56,6 +68,7 @@ def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=kc.compiler_params(cfg),
         interpret=interpret,
     )(a, b)
 

@@ -10,6 +10,12 @@ ceilings.  Two execution paths:
 * ``backend="pallas"``: times the Pallas kernels themselves — the path a
   real TPU runs (on CPU they execute in interpret mode: correctness-only,
   timing meaningless, still useful for smoke).
+
+``tuned=True`` (the honest mode) derives every ceiling from the
+*best-of-tuned* winners in the ``repro.tune`` store instead of whatever
+one hardcoded default achieves — the paper's core point: a ceiling that
+was not tuned for is not a ceiling, it's a data point.  The searches are
+persisted, so a second characterization re-times nothing.
 """
 
 from __future__ import annotations
@@ -22,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.machine import CPU_HOST, MachineSpec
+from repro.kernels.config import KernelConfig
 from repro.kernels.ert import bandwidth, flops, gemm, ref
 
 
@@ -39,33 +46,38 @@ def _time(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def measure_flops(dtype=jnp.float32, n: int = 1 << 20, n_iters: int = 256,
-                  ilp: int = 8, backend: str = "xla") -> float:
+                  ilp: int = 8, backend: str = "xla",
+                  config: KernelConfig | None = None) -> float:
     """Peak FLOP/s for one precision (paper Fig 1 ceiling)."""
     x = jnp.ones((n,), dtype)
     total = flops.fma_flops(n, n_iters, ilp)
     if backend == "pallas":
-        fn = lambda v: flops.fma_chain(v, n_iters, ilp)
+        fn = lambda v: flops.fma_chain(v, n_iters, ilp, config=config)
     else:
         fn = lambda v: ref.fma_chain_ref(v, n_iters, ilp)
     return total / _time(fn, x)
 
 
 def measure_bandwidth(dtype=jnp.float32, n: int = 1 << 24,
-                      backend: str = "xla") -> float:
+                      backend: str = "xla",
+                      config: KernelConfig | None = None) -> float:
     """Sustained triad bytes/s (HBM roof on TPU; DRAM here)."""
     a = jnp.ones((n,), dtype)
     b = jnp.ones((n,), dtype)
-    fn = bandwidth.triad if backend == "pallas" else ref.triad_ref
+    fn = ((lambda x, y: bandwidth.triad(x, y, config=config))
+          if backend == "pallas" else ref.triad_ref)
     t = _time(fn, a, b)
     return bandwidth.triad_bytes(n, np.dtype(dtype).itemsize) / t
 
 
 def measure_gemm(dtype=jnp.bfloat16, size: int = 1024,
-                 backend: str = "xla") -> float:
+                 backend: str = "xla",
+                 config: KernelConfig | None = None) -> float:
     """GEMM FLOP/s at one size (paper Fig 2 point)."""
     a = jnp.ones((size, size), dtype)
     b = jnp.ones((size, size), dtype)
-    fn = gemm.matmul if backend == "pallas" else ref.matmul_ref
+    fn = ((lambda x, y: gemm.matmul(x, y, config=config))
+          if backend == "pallas" else ref.matmul_ref)
     return gemm.gemm_flops(size, size, size) / _time(fn, a, b)
 
 
@@ -90,8 +102,34 @@ def ladder(backend: str = "xla", n: int = 1 << 20) -> dict[str, float]:
     return out
 
 
-def characterize(backend: str = "xla") -> MachineSpec:
-    """Empirical machine model of *this* host (paper Fig 1, measured)."""
+def characterize(backend: str = "xla", tuned: bool = False,
+                 store=None, smoke: bool = False) -> MachineSpec:
+    """Empirical machine model of *this* host (paper Fig 1, measured).
+
+    ``tuned=True`` routes through ``repro.tune``: ceilings become the
+    persisted best-of-tuned winners (searched once, store hits after),
+    instead of single default-parameter samples.  The tuned path is
+    XLA-oracle only — those are the honest host ceilings; interpret-mode
+    Pallas timings are not ceilings — so ``backend`` must stay "xla".
+    """
+    if tuned:
+        if backend != "xla":
+            raise ValueError(
+                "characterize(tuned=True) measures host ceilings via the "
+                "XLA oracles; backend must be 'xla' (interpret-mode "
+                f"Pallas timing is not a ceiling), got {backend!r}")
+        from repro.tune.search import tune_ceilings
+        c = tune_ceilings(store=store, smoke=smoke)
+        peaks = {
+            "f32": c["flops_f32"].record.metric,
+            "bf16": max(c["flops_bf16"].record.metric,
+                        c["gemm_bf16"].record.metric),
+        }
+        peaks["int8"] = peaks["bf16"]      # no int8 path on the CPU host
+        bw = {"hbm": c["bw_hbm"].record.metric,
+              "vmem": c["bw_vmem"].record.metric}
+        return CPU_HOST.with_empirical(peaks, bw)
+
     peaks = {
         "f32": measure_flops(jnp.float32, backend=backend),
         "bf16": max(measure_flops(jnp.bfloat16, backend=backend),

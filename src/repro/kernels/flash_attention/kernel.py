@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import config as kc
+
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
 NEG_INF = -1e30
@@ -81,14 +83,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True,
-                    block_q: int = DEFAULT_BLOCK_Q,
-                    block_k: int = DEFAULT_BLOCK_K,
+                    config: kc.KernelConfig | None = None,
+                    block_q: int | None = None,
+                    block_k: int | None = None,
                     interpret: bool = True) -> jax.Array:
-    """q (BH, Sq, hd), k/v (BH, Sk, hd) → (BH, Sq, hd)."""
+    """q (BH, Sq, hd), k/v (BH, Sk, hd) → (BH, Sq, hd).
+
+    Block sizes resolve explicit kwargs → ``config`` → the 512/512
+    default; both grid dims (row, q-block) are independent → ``parallel``.
+    """
+    cfg = kc.resolve("flash_attention", config, block_q=block_q,
+                     block_k=block_k)
     bh, sq, hd = q.shape
     _, sk, _ = k.shape
-    block_q = min(block_q, sq)
-    block_k = min(block_k, sk)
+    block_q = min(int(cfg.get("block_q")), sq)
+    block_k = min(int(cfg.get("block_k")), sk)
     assert sq % block_q == 0 and sk % block_k == 0
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_k=block_k, sk=sk,
@@ -108,6 +117,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q,), jnp.float32),          # l
             pltpu.VMEM((block_q, hd), jnp.float32),       # acc
         ],
+        compiler_params=kc.compiler_params(cfg),
         interpret=interpret,
     )(q, k, v)
 

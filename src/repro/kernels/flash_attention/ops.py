@@ -10,6 +10,12 @@ reference math and differentiates that (the flash recompute-not-store
 policy — on real TPU hardware the backward is its own Pallas kernel with
 the same signature; the jnp backward here is the CPU-validatable
 stand-in and is exactly what the roofline's 2×-forward backward models).
+
+Block sizes route through ``repro.tune.best_config``: if the autotuner
+has a persisted winner for this (shape, dtype, machine) the kernel runs
+it, otherwise the 512/512 default — callers can still pin blocks
+explicitly.  The store lookup happens at trace time (one ``os.stat`` per
+compile, zero per-step cost).
 """
 
 from __future__ import annotations
@@ -37,8 +43,15 @@ def _ref_gqa(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def _lookup_config(bh: int, sq: int, sk: int, hd: int, dtype) -> "object":
+    from repro.tune import best_config
+    return best_config("flash_attention", (bh, sq, sk, hd),
+                       dtype=jnp.dtype(dtype).name)
+
+
 def _kernel_gqa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
-                interpret: bool) -> jax.Array:
+                interpret: bool, block_q: int | None,
+                block_k: int | None) -> jax.Array:
     B, Sq, K, G, hd = q.shape
     _, Sk, _, _ = k.shape
     qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, Sq, hd)
@@ -46,15 +59,20 @@ def _kernel_gqa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
         B * K * G, Sk, hd)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
         B * K * G, Sk, hd)
-    of = flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    cfg = (None if block_q is not None or block_k is not None
+           else _lookup_config(B * K * G, Sq, Sk, hd, q.dtype))
+    of = flash_attention(qf, kf, vf, causal=causal, config=cfg,
+                         block_q=block_q, block_k=block_k,
+                         interpret=interpret)
     return of.reshape(B, K, G, Sq, hd).transpose(0, 3, 1, 2, 4)
 
 
-@functools.lru_cache(maxsize=8)
-def _make(causal: bool, interpret: bool):
+@functools.lru_cache(maxsize=16)
+def _make(causal: bool, interpret: bool, block_q: int | None,
+          block_k: int | None):
     @jax.custom_vjp
     def fa(q, k, v):
-        return _kernel_gqa(q, k, v, causal, interpret)
+        return _kernel_gqa(q, k, v, causal, interpret, block_q, block_k)
 
     def fwd(q, k, v):
         return fa(q, k, v), (q, k, v)
@@ -69,7 +87,12 @@ def _make(causal: bool, interpret: bool):
 
 
 def flash_attention_gqa(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                        causal: bool = True,
-                        interpret: bool = True) -> jax.Array:
-    """q (B, Sq, K, G, hd), k/v (B, Sk, K, hd) → (B, Sq, K, G, hd)."""
-    return _make(causal, interpret)(q, k, v)
+                        causal: bool = True, interpret: bool = True,
+                        block_q: int | None = None,
+                        block_k: int | None = None) -> jax.Array:
+    """q (B, Sq, K, G, hd), k/v (B, Sk, K, hd) → (B, Sq, K, G, hd).
+
+    ``block_q``/``block_k`` default to the tuned winner for this shape
+    (``repro.tune.best_config``), falling back to 512/512.
+    """
+    return _make(causal, interpret, block_q, block_k)(q, k, v)

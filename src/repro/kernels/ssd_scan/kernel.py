@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import config as kc
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
                 chunk: int):
@@ -64,11 +66,18 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
 
 
 def ssd_scan(xdt: jax.Array, a: jax.Array, B_: jax.Array, C_: jax.Array, *,
-             chunk: int = 128, interpret: bool = True) -> jax.Array:
-    """xdt (B, H, S, P), a (B, H, S), B_/C_ (B, S, N) → y (B, H, S, P)."""
+             config: kc.KernelConfig | None = None,
+             chunk: int | None = None, interpret: bool = True) -> jax.Array:
+    """xdt (B, H, S, P), a (B, H, S), B_/C_ (B, S, N) → y (B, H, S, P).
+
+    ``chunk`` resolves explicit kwarg → ``config`` → the 128 default; the
+    chunk grid dim is ``arbitrary`` (sequential — the VMEM state scratch
+    carries across chunks), B/H are ``parallel``.
+    """
+    cfg = kc.resolve("ssd_scan", config, chunk=chunk)
     Bsz, H, S, P = xdt.shape
     N = B_.shape[-1]
-    chunk = min(chunk, S)
+    chunk = min(int(cfg.get("chunk")), S)
     assert S % chunk == 0
     nc = S // chunk
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
@@ -84,6 +93,7 @@ def ssd_scan(xdt: jax.Array, a: jax.Array, B_: jax.Array, C_: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((Bsz, H, S, P), xdt.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=kc.compiler_params(cfg),
         interpret=interpret,
     )(xdt, a, B_, C_)
 

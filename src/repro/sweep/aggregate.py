@@ -99,6 +99,72 @@ def render_summary(records: Mapping[str, TraceRecord] | Sequence[TraceRecord]
     return sweep_table(summary_rows(records))
 
 
+def kernel_config_lines(records: Mapping[str, TraceRecord]
+                        | Sequence[TraceRecord]) -> list[str]:
+    """One line per measured point stating which kernel configs produced
+    it (from the ``meta.kernel_configs`` stamp) — the report-side half of
+    the tuned-config provenance."""
+    recs = list(records.values() if isinstance(records, Mapping)
+                else records)
+    out: list[str] = []
+    for rec in recs:
+        kcfg = rec.meta.get("kernel_configs")
+        if not isinstance(kcfg, dict) or not kcfg:
+            continue
+        parts = []
+        for kernel, info in sorted(kcfg.items()):
+            if not isinstance(info, dict):
+                continue
+            src = info.get("source", "?")
+            if src == "tuned_available":
+                n = len(info.get("entries", ()))
+                parts.append(f"{kernel}=tuned_available({n} shape(s))")
+            else:
+                params = ",".join(f"{k}={v}" for k, v in
+                                  sorted(info.get("params", {}).items()))
+                parts.append(f"{kernel}={src}({params})")
+        if parts:
+            out.append(f"  cfg {_label(rec)}: " + " ".join(parts))
+    return out
+
+
+def tune_mismatches(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
+                    tune_store=None) -> list[str]:
+    """Default-vs-tuned provenance check for measured sweep points.
+
+    Each measured record carries ``meta.kernel_configs`` — the tune-store
+    state when the point ran (``default`` = no winner existed for that
+    kernel; ``tuned_available`` = winners existed, shape-keyed).  A point
+    measured under ``default`` while the store now holds a tuned winner
+    (or the reverse) is stale evidence: its wall times don't reflect the
+    configs a fresh run would resolve.  Returns one human-readable flag
+    line per mismatch (empty = all consistent).
+    """
+    from repro.tune import tuned_kernels
+    now_tuned = set(tuned_kernels(tune_store, machine="cpu-host"))
+    recs = list(records.values() if isinstance(records, Mapping)
+                else records)
+    flags: list[str] = []
+    for rec in recs:
+        kcfg = rec.meta.get("kernel_configs")
+        if not isinstance(kcfg, dict):
+            continue
+        for kernel, info in sorted(kcfg.items()):
+            source = info.get("source") if isinstance(info, dict) else None
+            if source == "default" and kernel in now_tuned:
+                flags.append(
+                    f"{_label(rec)}: measured with default {kernel} "
+                    "config, but a tuned winner now exists — re-run "
+                    "(`repro.sweep run`) to pick it up")
+            elif source == "tuned_available" and kernel not in now_tuned:
+                flags.append(
+                    f"{_label(rec)}: measured while tuned {kernel} "
+                    "config(s) were available, but the tune store no "
+                    "longer has them — wall times are not reproducible "
+                    "from current state")
+    return flags
+
+
 # --------------------------------------------------------------------------
 # Gallery: rebuild roofline charts from persisted kernel payloads
 # --------------------------------------------------------------------------

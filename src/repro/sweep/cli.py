@@ -127,6 +127,12 @@ def cmd_report(ap: argparse.ArgumentParser, args) -> int:
               file=sys.stderr)
         return 2
     print(render_summary(recs))
+    from repro.sweep.aggregate import kernel_config_lines, tune_mismatches
+    for line in kernel_config_lines(recs):
+        print(line)
+    flags = tune_mismatches(recs, args.tune_store)
+    for flag in flags:
+        print(f"! tuned-config mismatch: {flag}")
     if args.charts:
         print()
         print(gallery(recs, max_charts=args.charts))
@@ -190,6 +196,9 @@ def main(argv: Sequence[str] | None = None) -> int:
                      help="campaign name (default: every sweep record)")
     rep.add_argument("--charts", type=int, default=0,
                      help="also render up to N per-config roofline charts")
+    rep.add_argument("--tune-store", default=None,
+                     help="tune store to check measured points' kernel "
+                          "configs against (default: repro.tune's default)")
     rep.set_defaults(fn=cmd_report, parser=rep)
 
     args = ap.parse_args(argv)

@@ -203,6 +203,12 @@ def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
     mesh_dict = {"data": point.mesh[0], "model": point.mesh[1]}
     meta = {"sweep_point": point.key, "sweep": sweep_name or "adhoc",
             "label": point.label, **point.to_dict()}
+    if point.measured:
+        # which kernel configs this measurement will run with (tuned
+        # winners vs hardcoded defaults) — the report side flags points
+        # measured with defaults after a tuned winner exists
+        from repro.tune import active_kernel_configs
+        meta["kernel_configs"] = active_kernel_configs()
 
     if not point.measured:
         cached = _cache_load(cache_dir, point)

@@ -1,0 +1,29 @@
+"""repro.tune — empirical kernel autotuner with a persistent best-config
+store (the paper's §II-A discipline applied to our own kernels: ceilings
+and kernel timings come from *tuned* configurations, not default-tile
+luck).
+
+Public surface:
+
+* :func:`best_config` / :func:`config_source` — zero-cost store lookup the
+  kernel ops wrappers, benchmarks and machine characterization route
+  through;
+* :func:`search` / :func:`search_all` / :func:`tune_ceilings` — the
+  timing searches (store hit → no re-timing);
+* :class:`TuneStore` / :class:`TuneRecord` — the machine-keyed JSON store;
+* ``python -m repro.tune`` — search / show / apply CLI.
+"""
+
+from repro.tune.search import (TuneOutcome, ceiling_shapes, search,
+                               search_all, tune_ceilings)
+from repro.tune.store import (DEFAULT_STORE, TuneRecord, TuneStore,
+                              active_kernel_configs, best_config,
+                              config_source, default_store_path, tune_key,
+                              tuned_kernels)
+
+__all__ = [
+    "TuneOutcome", "TuneRecord", "TuneStore", "DEFAULT_STORE",
+    "active_kernel_configs", "best_config", "ceiling_shapes",
+    "config_source", "default_store_path", "search", "search_all",
+    "tune_ceilings", "tune_key", "tuned_kernels",
+]

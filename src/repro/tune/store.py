@@ -1,0 +1,272 @@
+"""Persistent best-config store for the kernel autotuner.
+
+Same conventions as ``repro.trace.store``: schema-versioned, provenance
+stamped (git SHA + host fingerprint), corrupt files never fatal, records
+from a *newer* schema skipped with a warning instead of mis-parsed.  The
+shape differs — tuning wants point lookup, not history — so this is one
+JSON document ``{schema_version, records: {key: record}}`` keyed by
+``kernel|backend|shape|dtype|machine``: every later run of the same search
+space is a pure store hit and pays zero re-timing.
+
+Writes are read-modify-write through an atomic ``os.replace`` so a
+crashed writer leaves either the old file or the new one, never a torn
+line; the parsed document is cached per (mtime, size) so the hot
+``best_config`` lookup in the kernel ops wrappers costs one ``os.stat``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import warnings
+from typing import Any, Iterable, Mapping, Sequence
+
+from repro.kernels.config import KernelConfig, default_config
+
+SCHEMA_VERSION = 1
+DEFAULT_STORE = "benchmarks/results/tune.json"
+STORE_ENV = "REPRO_TUNE_STORE"
+
+
+def default_store_path() -> str:
+    return os.environ.get(STORE_ENV) or DEFAULT_STORE
+
+
+def shape_key(shape: Sequence[int]) -> str:
+    return "x".join(str(int(s)) for s in shape)
+
+
+def tune_key(kernel: str, shape: Sequence[int], dtype: str,
+             machine: str, backend: str = "pallas") -> str:
+    return f"{kernel}|{backend}|{shape_key(shape)}|{dtype}|{machine}"
+
+
+@dataclasses.dataclass
+class TuneRecord:
+    """The winner of one search: the unit of storage and lookup."""
+
+    schema_version: int
+    key: str
+    kernel: str
+    backend: str                  # "pallas" (tile search) | "xla" (oracle)
+    shape: list[int]
+    dtype: str
+    machine: str
+    params: dict[str, Any]        # winning KernelConfig params
+    wall_s: float                 # winner's measured wall seconds/call
+    metric: float                 # objective value (maximized)
+    metric_name: str              # "flops_per_s" | "bytes_per_s"
+    default_wall_s: float         # the default config's wall (before/after)
+    default_metric: float
+    n_candidates: int
+    timestamp: float
+    git_sha: str
+    host: dict[str, str]
+
+    @property
+    def speedup(self) -> float:
+        """Tuned-over-default improvement on the objective (>1 = win)."""
+        return self.metric / self.default_metric if self.default_metric \
+            else 1.0
+
+    def config(self) -> KernelConfig:
+        """Winning params as a KernelConfig (default semantics merged in
+        — dimension semantics are structural, not searched)."""
+        return default_config(self.kernel).replace(**self.params)
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TuneRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw.setdefault("schema_version", 0)
+        for name, dflt in (("key", ""), ("kernel", "?"),
+                           ("backend", "pallas"), ("shape", []),
+                           ("dtype", "float32"), ("machine", "cpu-host"),
+                           ("params", {}), ("wall_s", 0.0), ("metric", 0.0),
+                           ("metric_name", ""), ("default_wall_s", 0.0),
+                           ("default_metric", 0.0), ("n_candidates", 0),
+                           ("timestamp", 0.0), ("git_sha", "unknown"),
+                           ("host", {})):
+            kw.setdefault(name, dflt)
+        return cls(**kw)
+
+
+class TuneStore:
+    """Point-lookup JSON store of :class:`TuneRecord` winners."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_store_path()
+        self._cache: tuple[tuple[float, int], dict[str, Any]] | None = None
+
+    # -- read ------------------------------------------------------------
+    def _load(self) -> dict[str, Any]:
+        try:
+            st = os.stat(self.path)
+        except OSError:
+            return {}
+        stamp = (st.st_mtime, st.st_size)
+        if self._cache and self._cache[0] == stamp:
+            return self._cache[1]
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict):
+                raise ValueError("not a JSON object")
+        except (OSError, ValueError):
+            warnings.warn(f"{self.path}: corrupt tune store ignored")
+            doc = {}
+        if doc.get("schema_version", 0) > SCHEMA_VERSION:
+            warnings.warn(
+                f"{self.path}: schema {doc.get('schema_version')} > "
+                f"{SCHEMA_VERSION} (written by newer code) — ignored")
+            doc = {}
+        records = doc.get("records")
+        # per-record corruption (non-dict values from truncated or
+        # hand-edited stores) is dropped here, same never-fatal rule
+        doc = ({k: v for k, v in records.items() if isinstance(v, dict)}
+               if isinstance(records, dict) else {})
+        self._cache = (stamp, doc)
+        return doc
+
+    def get(self, key: str) -> TuneRecord | None:
+        d = self._load().get(key)
+        if d is None:
+            return None
+        if d.get("schema_version", 0) > SCHEMA_VERSION:
+            warnings.warn(f"{self.path}: record {key!r} from a newer "
+                          "schema — skipped")
+            return None
+        return TuneRecord.from_dict(d)
+
+    def records(self) -> list[TuneRecord]:
+        out = [TuneRecord.from_dict(d) for d in self._load().values()
+               if d.get("schema_version", 0) <= SCHEMA_VERSION]
+        out.sort(key=lambda r: (r.kernel, r.backend, r.key))
+        return out
+
+    def keys(self) -> Iterable[str]:
+        return self._load().keys()
+
+    # -- write -----------------------------------------------------------
+    def put(self, rec: TuneRecord) -> TuneRecord:
+        records = dict(self._load())
+        records[rec.key] = rec.to_dict()
+        doc = {"schema_version": SCHEMA_VERSION, "records": records}
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+        self._cache = None
+        return rec
+
+
+def make_record(kernel: str, shape: Sequence[int], dtype: str, machine: str,
+                backend: str, params: Mapping[str, Any], wall_s: float,
+                metric: float, metric_name: str, default_wall_s: float,
+                default_metric: float, n_candidates: int) -> TuneRecord:
+    from repro.trace.store import git_sha, host_fingerprint
+    return TuneRecord(
+        schema_version=SCHEMA_VERSION,
+        key=tune_key(kernel, shape, dtype, machine, backend),
+        kernel=kernel, backend=backend, shape=[int(s) for s in shape],
+        dtype=dtype, machine=machine, params=dict(params),
+        wall_s=wall_s, metric=metric, metric_name=metric_name,
+        default_wall_s=default_wall_s, default_metric=default_metric,
+        n_candidates=n_candidates, timestamp=time.time(),
+        git_sha=git_sha(), host=host_fingerprint())
+
+
+# --------------------------------------------------------------------------
+# The lookup every consumer routes through
+# --------------------------------------------------------------------------
+
+_STORES: dict[str, TuneStore] = {}
+
+
+def _as_store(store: "TuneStore | str | None") -> TuneStore:
+    """Resolve a path/None to a shared TuneStore instance.
+
+    Shared per path so the (mtime, size) parse cache actually survives
+    between the eager ops-wrapper lookups — repeat ``best_config`` calls
+    cost one ``os.stat``, not a re-parse.
+    """
+    if isinstance(store, TuneStore):
+        return store
+    path = store or default_store_path()
+    if path not in _STORES:
+        _STORES[path] = TuneStore(path)
+    return _STORES[path]
+
+
+def config_source(kernel: str, shape: Sequence[int], dtype: str = "float32",
+                  machine: str = "cpu-host", backend: str = "pallas",
+                  store: TuneStore | str | None = None
+                  ) -> tuple[str, KernelConfig]:
+    """("tuned" | "default", config) for one kernel instance."""
+    store = _as_store(store)
+    rec = store.get(tune_key(kernel, shape, dtype, machine, backend))
+    if rec is not None:
+        return "tuned", rec.config()
+    return "default", default_config(kernel)
+
+
+def best_config(kernel: str, shape: Sequence[int], dtype: str = "float32",
+                machine: str = "cpu-host", backend: str = "pallas",
+                store: TuneStore | str | None = None) -> KernelConfig:
+    """Tuned winner for (kernel, shape, dtype, machine) — or the default.
+
+    This is the zero-search-cost path: ``kernels/*/ops.py``, the ERT
+    characterization and the benchmarks all call it; a missing store or a
+    key miss silently falls back to the former hardcoded constants.
+    """
+    return config_source(kernel, shape, dtype, machine, backend, store)[1]
+
+
+def tuned_kernels(store: TuneStore | str | None = None,
+                  machine: str | None = None) -> dict[str, list[TuneRecord]]:
+    """kernel → its stored winners (optionally restricted to a machine)."""
+    store = _as_store(store)
+    out: dict[str, list[TuneRecord]] = {}
+    for rec in store.records():
+        if machine is None or rec.machine == machine:
+            out.setdefault(rec.kernel, []).append(rec)
+    return out
+
+
+def active_kernel_configs(machine: str = "cpu-host",
+                          store: TuneStore | str | None = None,
+                          kernels: Sequence[str] = ("flash_attention",
+                                                    "ssd_scan")
+                          ) -> dict[str, dict[str, Any]]:
+    """Per model kernel: what the tune store *offered* at stamp time.
+
+    ``source`` is ``"default"`` (no tuned winner existed for this kernel
+    under this machine key) or ``"tuned_available"`` (winners existed,
+    listed in ``entries``).  Deliberate wording: the ops-layer
+    ``best_config`` lookup is exact-shape-keyed, so a tuned entry only
+    actually served the point if the model's runtime kernel shape matched
+    one of ``entries`` — this stamp records store state, not a per-call
+    trace.  Sweep reports use it to flag stale evidence: a point measured
+    under ``default`` after winners land (or ``tuned_available`` winners
+    that have since vanished) no longer reflects a fresh run.
+    """
+    tuned = tuned_kernels(store, machine)
+    out: dict[str, dict[str, Any]] = {}
+    for kernel in kernels:
+        recs = tuned.get(kernel, [])
+        if recs:
+            out[kernel] = {
+                "source": "tuned_available",
+                "entries": [{"shape": r.shape, "dtype": r.dtype,
+                             "params": r.params} for r in recs]}
+        else:
+            out[kernel] = {"source": "default",
+                           "params": default_config(kernel).dict}
+    return out

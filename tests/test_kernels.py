@@ -56,6 +56,42 @@ class TestERT:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-2, atol=2e-2)
 
+    @pytest.mark.parametrize("n", [100, 16383, 16385, 70000])
+    def test_triad_arbitrary_size(self, n):
+        # no more `assert n % BLOCK == 0`: final block pads, pad sliced off
+        a = jnp.arange(n, dtype=jnp.float32)
+        b = a * 0.25
+        np.testing.assert_allclose(
+            np.asarray(BW.triad(a, b)),
+            np.asarray(ERT_REF.triad_ref(a, b)), rtol=1e-6)
+
+    @pytest.mark.parametrize("n", [100, 5000, 40000])
+    def test_fma_chain_arbitrary_size(self, n):
+        x = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(FL.fma_chain(x, 8, 2)),
+            np.asarray(ERT_REF.fma_chain_ref(x, 8, 2)), rtol=1e-5)
+
+    @pytest.mark.parametrize("block", [4096, 16384])
+    def test_triad_double_buffer_variant(self, block):
+        n = 5 * block                       # odd step count + padded tail
+        a = jnp.arange(n, dtype=jnp.float32)
+        b = a * 0.5
+        np.testing.assert_allclose(
+            np.asarray(BW.triad(a, b, block=block, double_buffer=True)),
+            np.asarray(ERT_REF.triad_ref(a, b)), rtol=1e-6)
+
+    def test_gemm_kernel_config_path(self):
+        from repro.kernels.config import default_config
+        ka, kb = jax.random.split(KEY)
+        a = jax.random.normal(ka, (256, 256), jnp.float32)
+        b = jax.random.normal(kb, (256, 256), jnp.float32)
+        cfg = default_config("ert_gemm").replace(block_m=64, block_n=128,
+                                                 block_k=64)
+        np.testing.assert_allclose(
+            np.asarray(GM.matmul(a, b, config=cfg)),
+            np.asarray(ERT_REF.matmul_ref(a, b)), rtol=1e-4, atol=1e-4)
+
     def test_flop_counters(self):
         assert FL.fma_flops(10, 4, 2) == (2 * 4 * 2 + 2) * 10
         assert BW.triad_bytes(10, 4) == 120
