@@ -2,9 +2,20 @@
 
 The paper counts kernel launches that perform zero FLOPs (type converts,
 layout moves, host transfers): 40-55% of all launches in both frameworks,
-with TF using ~2× more than PyTorch.  Here: the same census over the
-compiled HLO of DeepCAM (reference vs fused lowering — the TF-vs-PyTorch
-analogue) and of an LM train step, per phase.
+with TF using ~2× more than PyTorch.  Here, the same census over compiled
+HLO, twice:
+
+* DeepCAM reference vs fused lowering (the TF-vs-PyTorch analogue);
+* an LM train step (fwd / bwd / opt) with ``RunConfig.fusion`` off vs
+  auto — the diagnose→optimize→verify loop closed: the fused Pallas
+  kernels (``repro.kernels.fused``) target exactly the chains this census
+  ranks hottest, and the per-phase reference-vs-fused delta rows quantify
+  the payoff.
+
+CLI (the same census the ``fused_bench`` suite gates on)::
+
+    PYTHONPATH=src python -m benchmarks.zero_ai_census [--verbose]
+        [--lm-only] [--config NAME] [--seq N] [--batch N]
 """
 
 from __future__ import annotations
@@ -13,19 +24,24 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row
-from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.base import RunConfig
 from repro.configs.registry import get_smoke
 from repro.core import profile_fn, zero_ai_table
-from repro.models import build, input_specs
+from repro.models import build
 from repro.models.deepcam import deepcam_loss, deepcam_spec
 from repro.models.params import abstract
 
+LM_CONFIG = "glm4-9b"
+LM_SEQ = 64
+LM_BATCH = 4
 
-def main(verbose: bool = False) -> list[Row]:
+FUSION_MODES = ("off", "auto")
+_MODE_TAG = {"off": "reference", "auto": "fused"}
+
+
+def deepcam_census(run: RunConfig, census_by: dict) -> list[Row]:
+    """Reference-vs-fused DeepCAM lowerings (paper's TF-vs-PyTorch)."""
     rows: list[Row] = []
-    run = RunConfig(amp="O1")
-
-    census_by = {}
     for impl in ("reference", "fused"):
         spec = deepcam_spec(8)
         params = abstract(spec)
@@ -48,34 +64,111 @@ def main(verbose: bool = False) -> list[Row]:
             rows.append((f"zero_ai/{impl}_{phase}", 0.0,
                          f"zero={z};nonzero={n};frac={z/(z+n):.2f}"))
 
-    # the paper's comparison: the two lowerings' zero-AI counts
     zr = sum(census_by[f"reference/{p}"]["zero-AI"][0]
              for p in ("fwd", "bwd"))
     zf = sum(census_by[f"fused/{p}"]["zero-AI"][0] for p in ("fwd", "bwd"))
     rows.append(("zero_ai/reference_vs_fused", 0.0, f"{zr}vs{zf}"))
+    return rows
 
-    # LM train-step census (beyond-paper: the same diagnostic on an LM)
-    cfg = get_smoke("glm4-9b")
-    model = build(cfg)
-    shape = ShapeSpec("t", 64, 4, "train")
-    batch = {k: jax.ShapeDtypeStruct((4, *v.shape[1:]), v.dtype)
-             for k, v in input_specs(cfg, shape).items()}
-    params = abstract(model.spec)
 
-    def lm_bwd(p, b):
-        return jax.grad(lambda q: model.loss_fn(q, b, run)[0])(p)
+def lm_phase_census(config: str = LM_CONFIG, seq: int = LM_SEQ,
+                    batch: int = LM_BATCH
+                    ) -> dict[str, dict[str, tuple[int, int]]]:
+    """{"off/fwd": census, ..., "auto/opt": census} for one LM config.
 
-    res = profile_fn(lm_bwd, args=(params, batch), name="lm/bwd")
-    census = res.analysis.zero_ai_census()
-    census_by["lm/bwd"] = census
-    z, n = census["zero-AI"][0], census["non zero-AI"][0]
-    rows.append(("zero_ai/lm_bwd", 0.0,
-                 f"zero={z};nonzero={n};frac={z/(z+n):.2f}"))
+    Phases are the train-step triple (fwd / bwd / opt) from
+    ``repro.trace.cli.build_phase_args`` — the same programs a measured
+    trace runs, lowered abstractly (no allocation).
+    """
+    from repro.trace.cli import build_phase_args
+    model = build(get_smoke(config))
+    out: dict[str, dict[str, tuple[int, int]]] = {}
+    for fusion in FUSION_MODES:
+        run = RunConfig(amp="O1", fusion=fusion)
+        phases = build_phase_args(model, run, seq=seq, batch=batch,
+                                  concrete=False)
+        for phase, (fn, args) in phases.items():
+            res = profile_fn(fn, args=args, name=f"lm/{fusion}/{phase}")
+            out[f"{fusion}/{phase}"] = res.analysis.zero_ai_census()
+    return out
+
+
+def lm_totals(census_by: dict, fusion: str) -> tuple[int, int]:
+    """(zero-AI launches, total launches) across the train-step phases."""
+    zero = total = 0
+    for key, census in census_by.items():
+        if not key.startswith(f"{fusion}/"):
+            continue
+        z, n = census["zero-AI"][0], census["non zero-AI"][0]
+        zero += z
+        total += z + n
+    return zero, total
+
+
+def lm_step_summary(census_by: dict) -> dict[str, float]:
+    """Train-step totals + the zero-AI reduction fraction — the one
+    definition both the census rows and the ``fused_bench`` gate use."""
+    z_ref, n_ref = lm_totals(census_by, "off")
+    z_fus, n_fus = lm_totals(census_by, "auto")
+    return {"zero_ref": z_ref, "launches_ref": n_ref,
+            "zero_fused": z_fus, "launches_fused": n_fus,
+            "zero_reduction": 1.0 - z_fus / z_ref if z_ref else 0.0}
+
+
+def lm_census_rows(config: str = LM_CONFIG, seq: int = LM_SEQ,
+                   batch: int = LM_BATCH,
+                   census_sink: dict | None = None) -> list[Row]:
+    """Per-phase reference-vs-fused rows + the train-step delta row."""
+    census_by = lm_phase_census(config, seq, batch)
+    if census_sink is not None:
+        census_sink.update({f"lm/{k}": v for k, v in census_by.items()})
+    rows: list[Row] = []
+    for key, census in census_by.items():
+        fusion, phase = key.split("/")
+        z, n = census["zero-AI"][0], census["non zero-AI"][0]
+        rows.append((f"zero_ai/lm_{phase}_{_MODE_TAG[fusion]}", 0.0,
+                     f"zero={z};nonzero={n};frac={z/(z+n):.2f}"))
+    # per-phase delta + the train-step total the CI gate checks
+    for phase in ("fwd", "bwd", "opt"):
+        zr = census_by[f"off/{phase}"]["zero-AI"][0]
+        zf = census_by[f"auto/{phase}"]["zero-AI"][0]
+        rows.append((f"zero_ai/lm_{phase}_delta", 0.0, f"{zr}vs{zf}"))
+    s = lm_step_summary(census_by)
+    rows.append(("zero_ai/lm_step_reference_vs_fused", 0.0,
+                 f"zero={s['zero_ref']}vs{s['zero_fused']};"
+                 f"launches={s['launches_ref']}vs{s['launches_fused']};"
+                 f"zero_reduction={s['zero_reduction']:.2f}"))
+    return rows
+
+
+def main(verbose: bool = False, lm_only: bool = False,
+         config: str = LM_CONFIG, seq: int = LM_SEQ,
+         batch: int = LM_BATCH) -> list[Row]:
+    rows: list[Row] = []
+    census_by: dict = {}
+    if not lm_only:
+        rows.extend(deepcam_census(RunConfig(amp="O1"), census_by))
+    rows.extend(lm_census_rows(config, seq, batch, census_sink=census_by))
     if verbose:
         print(zero_ai_table(census_by))
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
-    emit(main(verbose=True))
+    ap = argparse.ArgumentParser(
+        description="zero-AI kernel census (paper Table III) with the "
+                    "reference-vs-fused delta per train phase")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print the full census table")
+    ap.add_argument("--lm-only", action="store_true",
+                    help="skip the DeepCAM half; LM train-step census only")
+    ap.add_argument("--config", default=LM_CONFIG,
+                    help=f"LM registry config (default {LM_CONFIG})")
+    ap.add_argument("--seq", type=int, default=LM_SEQ)
+    ap.add_argument("--batch", type=int, default=LM_BATCH)
+    a = ap.parse_args()
+    emit(main(verbose=a.verbose, lm_only=a.lm_only, config=a.config,
+              seq=a.seq, batch=a.batch))

@@ -174,6 +174,12 @@ class RunConfig:
     optimizer: str = "adamw"
     # deepcam lowering variant (paper's TF-vs-PyTorch comparison)
     impl: str = "reference"
+    # fused-kernel routing (repro.kernels.fused, docs/DESIGN.md §12):
+    # "off" = reference lowerings everywhere; "auto" = route the census's
+    # memory-bound hot chains (norm+residual+cast, swiglu epilogue, AdamW
+    # leaf update, embedding backward) through the fused Pallas kernels,
+    # falling back to reference wherever a shape/dtype is ineligible
+    fusion: str = "off"
     # MoE combine lowering: "default" (XLA masked-gather → model-axis
     # all-reduce), "reshard" (explicitly bring the expert buffer back to
     # batch sharding in bf16, gather locally), "a2a" (shard the sorted-token

@@ -26,7 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
-KERNELS = ("triad", "fma_chain", "ert_gemm", "flash_attention", "ssd_scan")
+KERNELS = ("triad", "fma_chain", "ert_gemm", "flash_attention", "ssd_scan",
+           "fused_norm", "fused_swiglu", "fused_adamw")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,14 @@ DEFAULTS: dict[str, KernelConfig] = {
         block_q=512, block_k=512),
     "ssd_scan": KernelConfig.make(
         "ssd_scan", ("parallel", "parallel", "arbitrary"), chunk=128),
+    # fused epilogue kernels (repro.kernels.fused): row blocks are
+    # independent → a single parallel grid dim each
+    "fused_norm": KernelConfig.make(
+        "fused_norm", ("parallel",), block_rows=1024),
+    "fused_swiglu": KernelConfig.make(
+        "fused_swiglu", ("parallel",), block_rows=1024),
+    "fused_adamw": KernelConfig.make(
+        "fused_adamw", ("parallel",), block=65536),
 }
 
 

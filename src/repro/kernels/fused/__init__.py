@@ -1,0 +1,43 @@
+"""repro.kernels.fused — roofline-guided fusion of the memory-bound hot path.
+
+The zero-AI census (paper Table III, ``benchmarks/zero_ai_census.py``)
+shows 40-55% of kernel launches in a train step are zero-FLOP data
+movement pinned to the HBM roof.  Czaja et al. (PAPERS.md: *Applying the
+Roofline model for Deep Learning performance optimizations*) demonstrate
+the payoff of acting on that diagnosis: fuse the memory-bound chains and
+re-measure against the hierarchical roofline.  This package closes that
+diagnose → optimize → verify loop with Pallas kernels for the chains the
+census ranks hottest:
+
+* :mod:`norm`   — RMSNorm / LayerNorm with the residual-add and the
+  dtype-cast epilogue fused into one pass (the reference lowering
+  round-trips every norm through fp32 — two convert launches per norm
+  under AMP O1/O2);
+* :mod:`swiglu` — the SwiGLU / GeGLU ``act(gate) · up`` epilogue in one
+  pass (reference: silu + multiply + cast as separate streaming kernels);
+* :mod:`adamw`  — the AdamW leaf update (moment update + bias correction
+  + weight decay + param write) in one pass per leaf block, replacing the
+  multi-launch elementwise chain in ``repro.train.optim``;
+* :mod:`ops`    — the model-facing routing layer: eligibility rules,
+  ``custom_vjp`` wrappers (Pallas has no autodiff rule; backwards
+  recompute the reference math), tuned-config lookup via
+  :func:`repro.tune.best_config`, and the one-hot matmul embedding
+  backward that replaces XLA-CPU's 256-launch scatter expansion — the
+  single largest zero-AI term the census finds in an LM train step.
+
+Every kernel takes a shared :class:`repro.kernels.config.KernelConfig`
+(``fused_norm`` / ``fused_swiglu`` / ``fused_adamw``) and is registered in
+the ``repro.tune`` search spaces; ineligible shapes/dtypes fall back to
+the reference implementation with identical outputs (oracle parity is
+enforced by ``tests/test_fused.py``).
+"""
+
+from repro.kernels.fused.adamw import fused_adamw
+from repro.kernels.fused.norm import (fused_layernorm, fused_rmsnorm,
+                                      fused_rmsnorm_residual)
+from repro.kernels.fused.swiglu import fused_swiglu
+
+__all__ = [
+    "fused_adamw", "fused_layernorm", "fused_rmsnorm",
+    "fused_rmsnorm_residual", "fused_swiglu",
+]

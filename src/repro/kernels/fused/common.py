@@ -1,0 +1,70 @@
+"""Shared launch plumbing for the row-blocked fused kernels.
+
+Every fused forward kernel is row-parallel over a 2D ``(rows, d)`` view:
+each row is normalized / activated independently, so the grid is a 1D
+sweep over row blocks (``parallel`` — no state carries between blocks)
+and arbitrary row counts are handled by padding the final block (the
+triad/fma_chain convention from PR 3, instead of ``assert rows % block``).
+Padding rows are all-zero, which every kernel body maps to a finite value
+(rsqrt(0 + eps) stays finite), and are sliced off after the call.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import config as kc
+
+
+def pad_rows(x: jax.Array, block: int) -> jax.Array:
+    """Zero-pad dim 0 up to a multiple of ``block`` (no-op if aligned)."""
+    pad = (-x.shape[0]) % block
+    if not pad:
+        return x
+    width = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, width)
+
+
+def row_blocked_call(kernel: Callable, row_args: Sequence[jax.Array],
+                     shared_args: Sequence[jax.Array],
+                     out_dtypes: Sequence[Any], cfg: kc.KernelConfig, *,
+                     interpret: bool = True) -> tuple[jax.Array, ...]:
+    """Launch ``kernel`` over row blocks of 2D ``(rows, d)`` operands.
+
+    ``row_args`` are blocked over dim 0; ``shared_args`` (1D, e.g. norm
+    scale/bias) are broadcast to every block.  Outputs mirror the row
+    layout, one per entry of ``out_dtypes``, and are sliced back to the
+    unpadded row count.
+    """
+    rows, d = row_args[0].shape
+    block = min(int(cfg.get("block_rows")), rows)
+    padded = [pad_rows(a, block) for a in row_args]
+    n_blocks = padded[0].shape[0] // block
+
+    in_specs = [pl.BlockSpec((block, d), lambda i: (i, 0)) for _ in padded]
+    for s in shared_args:
+        in_specs.append(pl.BlockSpec(s.shape, lambda i: (0,)))
+    out_specs = [pl.BlockSpec((block, d), lambda i: (i, 0))
+                 for _ in out_dtypes]
+    out_shape = [jax.ShapeDtypeStruct((n_blocks * block, d), dt)
+                 for dt in out_dtypes]
+    if len(out_dtypes) == 1:
+        out_specs, out_shape = out_specs[0], out_shape[0]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=kc.compiler_params(cfg),
+        interpret=interpret,
+    )(*padded, *shared_args)
+    outs = (out,) if len(out_dtypes) == 1 else tuple(out)
+    if outs[0].shape[0] != rows:
+        outs = tuple(o[:rows] for o in outs)
+    return outs

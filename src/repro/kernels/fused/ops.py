@@ -1,0 +1,336 @@
+"""Model-facing routing for the fused kernels: eligibility + custom VJPs.
+
+``RunConfig.fusion = "auto"`` routes the memory-bound chains the zero-AI
+census ranks hottest through the Pallas kernels in this package; anything
+the kernels cannot take (exotic dtypes, degenerate shapes, oversized
+rows) silently falls back to the reference implementation with identical
+outputs — the eligibility predicates here are the single source of that
+decision, and ``tests/test_fused.py`` pins the fallback behaviour.
+
+``pallas_call`` has no autodiff rule, so every forward that sits inside
+``jax.grad`` is wrapped in a ``custom_vjp`` whose backward recomputes the
+reference math (the same recompute-not-store policy as the flash
+attention wrapper, ``repro.kernels.flash_attention.ops``).
+
+Kernel launch parameters resolve through :func:`repro.tune.best_config`
+at trace time — one store lookup per compile, zero per-step cost —
+falling back to the ``repro.kernels.config`` defaults on a miss.
+
+Also here: :func:`embed_with_onehot_grad`.  XLA's CPU backend expands the
+embedding-gradient scatter into a while loop of B·S single-row updates —
+the census measures it as the *single largest* zero-AI term of an LM
+train step (768 of 982 launches on the census model).  The custom VJP
+keeps the forward gather and computes the table gradient as one
+``onehot(tokens)ᵀ @ g`` matmul instead; eligibility caps the transient
+one-hot at :data:`ONEHOT_BYTES_MAX` so huge-vocab cells keep the scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused import adamw as ak
+from repro.kernels.fused import norm as nk
+from repro.kernels.fused import swiglu as sk
+
+_FLOAT_DTYPES = (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16))
+
+# rows above the default block are fine (the grid sweeps blocks); the
+# feature dim must fit one VMEM-resident row block
+NORM_D_MAX = 16_384
+SWIGLU_D_MAX = 32_768
+# transient one-hot budget for the scatter-free embedding backward
+ONEHOT_BYTES_MAX = 2 ** 28
+# the flash-from-chunked route needs a non-degenerate q/k block
+FLASH_MIN_BLOCK = 16
+
+
+def fusion_enabled(run) -> bool:
+    """The routing predicate every call site guards on."""
+    return run is not None and getattr(run, "fusion", "off") == "auto"
+
+
+# --------------------------------------------------------------------------
+# Eligibility rules (docs/DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def _floaty(*arrs) -> bool:
+    return all(jnp.dtype(a.dtype) in _FLOAT_DTYPES for a in arrs)
+
+
+def norm_eligible(x, scale, bias=None) -> bool:
+    """2D+ float32/bf16 activations with a matching 1D scale (and bias)."""
+    if x.ndim < 2 or x.shape[-1] == 0 or x.shape[-1] > NORM_D_MAX:
+        return False
+    if scale.shape != (x.shape[-1],):
+        return False
+    if bias is not None and bias.shape != scale.shape:
+        return False
+    return _floaty(x)
+
+
+def swiglu_eligible(gate, up) -> bool:
+    if gate.ndim < 2 or gate.shape != up.shape:
+        return False
+    if gate.shape[-1] == 0 or gate.shape[-1] > SWIGLU_D_MAX:
+        return False
+    return _floaty(gate, up)
+
+
+def adamw_eligible(g, m, v, p) -> bool:
+    """Same-shaped float leaves; anything else keeps the reference chain."""
+    if not (g.shape == m.shape == v.shape == p.shape) or p.size == 0:
+        return False
+    return _floaty(g, m, v, p)
+
+
+def embed_grad_eligible(tokens, vocab: int) -> bool:
+    """Cap the transient (B·S, V) one-hot the matmul backward builds."""
+    return 0 < tokens.size * vocab * 4 <= ONEHOT_BYTES_MAX
+
+
+def flash_from_chunked_eligible(sq: int, sk_: int, *, causal: bool,
+                                has_memory: bool, has_cache: bool,
+                                softmax_f32: bool) -> bool:
+    """May the chunked-prefill path route to the flash kernel?
+
+    The kernel is causal self-attention with fp32 online-softmax
+    statistics; its largest block that divides the sequence must stay
+    non-degenerate (a prime-length 17-token sequence would run 1-wide
+    blocks — worse than the chunked reference).
+    """
+    if has_memory or has_cache or not causal or not softmax_f32:
+        return False
+    if sq != sk_:
+        return False
+
+    def fit(block: int, dim: int) -> int:
+        block = min(block, dim)
+        while block > 1 and dim % block:
+            block //= 2
+        return block
+
+    from repro.kernels.flash_attention.kernel import (DEFAULT_BLOCK_K,
+                                                      DEFAULT_BLOCK_Q)
+    return (fit(DEFAULT_BLOCK_Q, sq) >= FLASH_MIN_BLOCK
+            and fit(DEFAULT_BLOCK_K, sk_) >= FLASH_MIN_BLOCK)
+
+
+def _lookup(kernel: str, shape: tuple[int, ...], dtype) -> "object":
+    from repro.tune import best_config
+    return best_config(kernel, shape, dtype=jnp.dtype(dtype).name)
+
+
+# --------------------------------------------------------------------------
+# Norms (custom VJP: backward differentiates the reference math)
+# --------------------------------------------------------------------------
+
+def _rms_ref(x2, scale, eps, out_dtype):
+    xf = x2.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(out_dtype)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_rmsnorm(eps: float, out_dtype_name: str):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(x2, scale):
+        cfg = _lookup("fused_norm", x2.shape, x2.dtype)
+        return nk.fused_rmsnorm(x2, scale, eps=eps, out_dtype=out_dtype,
+                                config=cfg)
+
+    def fwd(x2, scale):
+        return f(x2, scale), (x2, scale)
+
+    def bwd(res, g):
+        x2, scale = res
+        _, vjp = jax.vjp(lambda a, s: _rms_ref(a, s, eps, out_dtype),
+                         x2, scale)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+            out_dtype=None) -> jax.Array:
+    """Routed fused RMSNorm on any (..., d) activation."""
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    y = _make_rmsnorm(float(eps), out_dtype.name)(x2, scale)
+    return y.reshape(*x.shape[:-1], d)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_rmsnorm_residual(eps: float, out_dtype_name: str):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(x2, h2, scale):
+        cfg = _lookup("fused_norm", x2.shape, x2.dtype)
+        return nk.fused_rmsnorm_residual(x2, h2, scale, eps=eps,
+                                         out_dtype=out_dtype, config=cfg)
+
+    def ref(x2, h2, scale):
+        r = x2 + h2
+        return r, _rms_ref(r, scale, eps, out_dtype)
+
+    def fwd(x2, h2, scale):
+        return f(x2, h2, scale), (x2, h2, scale)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(ref, *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def rmsnorm_residual(x: jax.Array, h: jax.Array, scale: jax.Array, *,
+                     eps: float = 1e-5, out_dtype=None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Routed fused (x + h, rmsnorm(x + h)·scale) on (..., d) streams."""
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    d = x.shape[-1]
+    r, y = _make_rmsnorm_residual(float(eps), out_dtype.name)(
+        x.reshape(-1, d), h.reshape(-1, d), scale)
+    return r.reshape(x.shape), y.reshape(*x.shape[:-1], d)
+
+
+def _ln_ref(x2, scale, bias, eps, out_dtype):
+    xf = x2.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(out_dtype)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_layernorm(eps: float, out_dtype_name: str):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(x2, scale, bias):
+        cfg = _lookup("fused_norm", x2.shape, x2.dtype)
+        return nk.fused_layernorm(x2, scale, bias, eps=eps,
+                                  out_dtype=out_dtype, config=cfg)
+
+    def fwd(x2, scale, bias):
+        return f(x2, scale, bias), (x2, scale, bias)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(
+            lambda a, s, b: _ln_ref(a, s, b, eps, out_dtype), *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+              eps: float = 1e-5, out_dtype=None) -> jax.Array:
+    """Routed fused LayerNorm on any (..., d) activation."""
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    d = x.shape[-1]
+    y = _make_layernorm(float(eps), out_dtype.name)(
+        x.reshape(-1, d), scale, bias)
+    return y.reshape(*x.shape[:-1], d)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU / GeGLU epilogue
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _make_swiglu(act: str, out_dtype_name: str):
+    out_dtype = jnp.dtype(out_dtype_name)
+
+    @jax.custom_vjp
+    def f(g2, u2):
+        cfg = _lookup("fused_swiglu", g2.shape, g2.dtype)
+        return sk.fused_swiglu(g2, u2, act=act, out_dtype=out_dtype,
+                               config=cfg)
+
+    def ref(g2, u2):
+        gf = g2.astype(jnp.float32)
+        h = jax.nn.silu(gf) if act == "silu" else jax.nn.gelu(gf)
+        return (h * u2.astype(jnp.float32)).astype(out_dtype)
+
+    def fwd(g2, u2):
+        return f(g2, u2), (g2, u2)
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(ref, *res)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def swiglu(gate: jax.Array, up: jax.Array, *, act: str = "silu",
+           out_dtype=None) -> jax.Array:
+    """Routed fused act(gate)·up on (..., d_ff) activations."""
+    out_dtype = jnp.dtype(out_dtype or gate.dtype)
+    d = gate.shape[-1]
+    y = _make_swiglu(act, out_dtype.name)(
+        gate.reshape(-1, d), up.reshape(-1, d))
+    return y.reshape(gate.shape)
+
+
+# --------------------------------------------------------------------------
+# AdamW leaf update (no grad path — the optimizer is not differentiated)
+# --------------------------------------------------------------------------
+
+def adamw_leaf(g, m, v, p, bc1, bc2, *, lr: float, b1: float, b2: float,
+               eps: float, weight_decay: float
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Routed fused AdamW update for one leaf → (new_p, new_m, new_v)."""
+    cfg = _lookup("fused_adamw", (p.size,), p.dtype)
+    return ak.fused_adamw(g, m, v, p, bc1, bc2, lr=lr, b1=b1, b2=b2,
+                          eps=eps, weight_decay=weight_decay, config=cfg)
+
+
+# --------------------------------------------------------------------------
+# Scatter-free embedding backward
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _make_embed(vocab: int, table_dtype_name: str, compute_dtype_name: str):
+    table_dtype = jnp.dtype(table_dtype_name)
+    compute_dtype = jnp.dtype(compute_dtype_name)
+
+    @jax.custom_vjp
+    def f(table, tokens):
+        return table.astype(compute_dtype)[tokens]
+
+    def fwd(table, tokens):
+        return f(table, tokens), tokens
+
+    def bwd(tokens, g):
+        oh = jax.nn.one_hot(tokens.reshape(-1), vocab, dtype=jnp.float32)
+        gt = oh.T @ g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+        return gt.astype(table_dtype), None
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def embed_with_onehot_grad(table: jax.Array, tokens: jax.Array,
+                           compute_dtype) -> jax.Array:
+    """Embedding gather whose backward is one ``onehotᵀ @ g`` matmul.
+
+    Forward is exactly ``table.astype(compute_dtype)[tokens]``; only the
+    gradient lowering changes (matmul instead of XLA-CPU's per-row
+    scatter loop) — the summed result matches the scatter up to fp32
+    reduction order.
+    """
+    return _make_embed(int(table.shape[0]), jnp.dtype(table.dtype).name,
+                       jnp.dtype(compute_dtype).name)(table, tokens)

@@ -205,7 +205,7 @@ def _build_deepcam(cfg: ModelConfig) -> Model:
 
     def loss_fn(params, batch, run):
         loss = DC.deepcam_loss(params, batch["images"], batch["labels"], run,
-                               impl=getattr(run, "impl", "reference"))
+                               impl=DC.resolve_impl(run))
         return loss, {"loss": loss}
 
     def forward_fn(params, batch, run):

@@ -160,6 +160,18 @@ def _resize(x, hw):
     return jax.image.resize(x, (x.shape[0], *hw, x.shape[-1]), "bilinear")
 
 
+def resolve_impl(run: RunConfig, impl: str | None = None) -> str:
+    """Which lowering a run selects: an explicit ``impl`` wins, then the
+    ``RunConfig.impl`` knob, and ``fusion="auto"`` upgrades the default
+    reference lowering to the fused one (the same roofline move the LM
+    path makes through ``repro.kernels.fused``)."""
+    chosen = impl if impl is not None else run.impl
+    if chosen == "reference" and getattr(run, "fusion", "off") == "auto" \
+            and impl is None:
+        return "fused"
+    return chosen
+
+
 def deepcam_forward(params: Params, images: jax.Array, run: RunConfig,
                     impl: str = "reference") -> jax.Array:
     """images (B, H, W, 16) → logits (B, H, W, 3)."""

@@ -65,11 +65,10 @@ def _shared_block(params: Params, x: jax.Array, site: int, cfg: ModelConfig,
     ln = jax.tree.map(lambda a: a[site], params["site_ln"])
     ln2 = jax.tree.map(lambda a: a[site], params["site_ln_mlp"])
     h, new_cache = L.attention_apply(
-        params["shared"]["attn"], L.rmsnorm_apply(ln, x, cfg.norm_eps),
+        params["shared"]["attn"], L.rmsnorm_apply(ln, x, cfg.norm_eps, run),
         cfg, run, positions=positions, kv_cache=kv_cache, cache_len=cache_len)
-    x = x + h
-    x = x + L.mlp_apply(params["shared"]["mlp"],
-                        L.rmsnorm_apply(ln2, x, cfg.norm_eps), cfg, run)
+    x, y = L.rmsnorm_residual_apply(ln2, x, h, cfg.norm_eps, run)
+    x = x + L.mlp_apply(params["shared"]["mlp"], y, cfg, run)
     return x, new_cache
 
 
@@ -88,8 +87,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
     def ssm_body(h, layer_p):
         h = constrain(h, run, "batch", "seq", None)
         y, _ = S.ssm_apply(layer_p["ssm"],
-                           L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
-                           cfg, run)
+                           L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps,
+                                           run), cfg, run)
         return constrain(h + y, run, "batch", "seq", None), None
 
     done = 0
@@ -104,7 +103,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
                 site < n_sites and done == cfg.n_layers and n_sites * k == cfg.n_layers):
             x, _ = _shared_block(params, x, site, cfg, run, positions)
             site += 1
-    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     logits = L.unembed_apply(params["embed"], x, run)
     return logits, jnp.zeros((), jnp.float32)
 
@@ -139,7 +138,8 @@ def decode_step(params: Params, tokens: jax.Array, state: HybridState,
         h = carry
         layer_p, st = inp
         y, new_st = S.ssm_apply(
-            layer_p["ssm"], L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
+            layer_p["ssm"],
+            L.rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps, run),
             cfg, run, state=st)
         return h + y, new_st
 
@@ -166,7 +166,7 @@ def decode_step(params: Params, tokens: jax.Array, state: HybridState,
             new_v = new_v.at[site].set(upd[1])
             site += 1
     new_ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm_parts)
-    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     logits = L.unembed_apply(params["embed"], x, run)
     return logits, HybridState(ssm=new_ssm, attn_k=new_k, attn_v=new_v,
                                length=state.length + 1)

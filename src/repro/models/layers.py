@@ -22,12 +22,27 @@ Params = Any
 # --------------------------------------------------------------------------
 # Norms
 # --------------------------------------------------------------------------
+#
+# Every norm takes an optional ``run``: under ``run.fusion == "auto"`` the
+# upcast → statistics → scale → downcast chain routes through the fused
+# Pallas kernels (repro.kernels.fused) instead of lowering as separate
+# convert/reduce/multiply launches; ineligible shapes/dtypes silently fall
+# back to the reference math below (same outputs, enforced by tests).
+
+def _fused(run):
+    from repro.kernels.fused import ops as fops
+    return fops if fops.fusion_enabled(run) else None
+
 
 def rmsnorm_spec(d: int) -> Params:
     return {"scale": P((d,), ("embed",), "ones")}
 
 
-def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5,
+                  run: RunConfig | None = None) -> jax.Array:
+    fops = _fused(run)
+    if fops is not None and fops.norm_eligible(x, p["scale"]):
+        return fops.rmsnorm(x, p["scale"], eps=eps)
     dt = x.dtype
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -35,12 +50,33 @@ def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
             ).astype(dt)
 
 
+def rmsnorm_residual_apply(p: Params, x: jax.Array, h: jax.Array,
+                           eps: float = 1e-5,
+                           run: RunConfig | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    """(x + h, rmsnorm(x + h)) — the pre-norm block's residual seam.
+
+    Fusing the residual add into the following norm saves one full
+    streaming pass over the (B, S, D) residual stream per sub-layer.
+    """
+    fops = _fused(run)
+    if fops is not None and x.shape == h.shape \
+            and fops.norm_eligible(x, p["scale"]):
+        return fops.rmsnorm_residual(x, h, p["scale"], eps=eps)
+    r = x + h
+    return r, rmsnorm_apply(p, r, eps)
+
+
 def layernorm_spec(d: int) -> Params:
     return {"scale": P((d,), ("embed",), "ones"),
             "bias": P((d,), ("embed",), "zeros")}
 
 
-def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5,
+                    run: RunConfig | None = None) -> jax.Array:
+    fops = _fused(run)
+    if fops is not None and fops.norm_eligible(x, p["scale"], p["bias"]):
+        return fops.layernorm(x, p["scale"], p["bias"], eps=eps)
     dt = x.dtype
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
@@ -215,9 +251,20 @@ def _attention_apply(p, x, cfg, run, positions=None, kv_cache=None,
             out = fa_ops.flash_attention_gqa(qg, k, v)
         elif (run.attn_impl == "chunked" and S > run.attn_chunk
                 and S % run.attn_chunk == 0):
-            out = _sdpa_chunked(qg, k, v, positions, k_positions,
-                                causal and memory is None, run.attn_chunk,
-                                stat_dtype=sd)
+            # fusion="auto" upgrades the chunked-prefill path to the flash
+            # kernel when the shape is eligible (causal self-attn, fp32
+            # softmax stats, non-degenerate blocks) — same score math, the
+            # (chunk x Sk) matrices stay in VMEM instead of rematerializing
+            fops = _fused(run)
+            if fops is not None and fops.flash_from_chunked_eligible(
+                    S, k.shape[1], causal=causal, has_memory=memory is not None,
+                    has_cache=False, softmax_f32=run.softmax_f32):
+                from repro.kernels.flash_attention import ops as fa_ops
+                out = fa_ops.flash_attention_gqa(qg, k, v)
+            else:
+                out = _sdpa_chunked(qg, k, v, positions, k_positions,
+                                    causal and memory is None,
+                                    run.attn_chunk, stat_dtype=sd)
         else:
             out = _sdpa(qg, k, v, positions, k_positions,
                         causal and memory is None, stat_dtype=sd)
@@ -262,8 +309,13 @@ def _mlp_apply(p, x, cfg, run):
     if cfg.act in ("swiglu", "geglu"):
         g = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cd))
         u = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cd))
-        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
-        h = act * u
+        fops = _fused(run)
+        if fops is not None and fops.swiglu_eligible(g, u):
+            h = fops.swiglu(g, u,
+                            act="silu" if cfg.act == "swiglu" else "gelu")
+        else:
+            act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+            h = act * u
     else:
         h = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cd))
         h = jax.nn.gelu(h) if cfg.act == "gelu" else jnp.square(jax.nn.relu(h))
@@ -285,7 +337,16 @@ def embed_spec(cfg: ModelConfig) -> Params:
 
 def embed_apply(p: Params, tokens: jax.Array, run: RunConfig) -> jax.Array:
     from repro.distributed.sharding import constrain
-    x = p["tokens"].astype(run.compute_dtype)[tokens]
+    fops = _fused(run)
+    if fops is not None and fops.embed_grad_eligible(tokens,
+                                                     p["tokens"].shape[0]):
+        # same gather forward; the backward becomes one onehot^T @ g
+        # matmul instead of XLA-CPU's per-row scatter loop — the census's
+        # single largest zero-AI term (docs/DESIGN.md §12)
+        x = fops.embed_with_onehot_grad(p["tokens"], tokens,
+                                        run.compute_dtype)
+    else:
+        x = p["tokens"].astype(run.compute_dtype)[tokens]
     return constrain(x, run, "batch", "seq", None)
 
 

@@ -180,7 +180,7 @@ def _ssm_apply(p, x, cfg, run, state=None):
 
     y = y + xh * p["D_skip"].astype(cd)[None, None, :, None]
     y = y.reshape(B, S, di)
-    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(zg), cfg.norm_eps)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(zg), cfg.norm_eps, run)
     out = jnp.einsum("bse,ed->bsd", y.astype(cd), p["out_proj"].astype(cd))
     return out.astype(x.dtype), new_state
 
@@ -224,8 +224,8 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
     def body(h, layer_p):
         h = constrain(h, run, "batch", "seq", None)
         y, _ = ssm_apply(layer_p["ssm"],
-                         rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
-                         cfg, run)
+                         rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps,
+                                       run), cfg, run)
         return constrain(h + y, run, "batch", "seq", None), None
 
     if run.remat == "full":
@@ -234,7 +234,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
     x, _ = jax.lax.scan(body, x, params["blocks"])
-    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     logits = L.unembed_apply(params["embed"], x, run)
     return logits, jnp.zeros((), jnp.float32)
 
@@ -254,11 +254,11 @@ def decode_step(params: Params, tokens: jax.Array, state: SSMState,
     def body(h, inp):
         layer_p, st = inp
         y, new_st = ssm_apply(layer_p["ssm"],
-                              rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps),
-                              cfg, run, state=st)
+                              rmsnorm_apply(layer_p["ln"], h, cfg.norm_eps,
+                                            run), cfg, run, state=st)
         return h + y, new_st
 
     x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
-    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     logits = L.unembed_apply(params["embed"], x, run)
     return logits, new_state

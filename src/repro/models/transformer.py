@@ -54,16 +54,21 @@ def block_apply(p: Params, x: jax.Array, cfg: ModelConfig, run: RunConfig,
                 cross_cache=None):
     """One transformer block. Returns (x, new_kv_cache, aux_loss)."""
     h, new_cache = L.attention_apply(
-        p["attn"], L.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps), cfg, run,
-        positions=positions, kv_cache=kv_cache, cache_len=cache_len)
-    x = x + h
+        p["attn"], L.rmsnorm_apply(p["ln_attn"], x, cfg.norm_eps, run),
+        cfg, run, positions=positions, kv_cache=kv_cache,
+        cache_len=cache_len)
     if memory is not None:
+        x = x + h
         hc, _ = L.attention_apply(
-            p["cross"], L.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps),
+            p["cross"], L.rmsnorm_apply(p["ln_cross"], x, cfg.norm_eps, run),
             cfg, run, positions=positions, causal=False, memory=memory)
-        x = x + hc
+        x, y = L.rmsnorm_residual_apply(p["ln_mlp"], x, hc, cfg.norm_eps,
+                                        run)
+    else:
+        # residual add + next norm fuse into one pass under fusion="auto"
+        x, y = L.rmsnorm_residual_apply(p["ln_mlp"], x, h, cfg.norm_eps,
+                                        run)
     aux = jnp.zeros((), jnp.float32)
-    y = L.rmsnorm_apply(p["ln_mlp"], x, cfg.norm_eps)
     if cfg.family == "moe":
         y, aux = M.moe_apply(p["moe"], y, cfg, run)
     else:
@@ -125,7 +130,7 @@ def encode(params: Params, embeds: jax.Array, cfg: ModelConfig,
     S = embeds.shape[1]
     x, _ = _scan_blocks(params["enc_blocks"], embeds.astype(run.compute_dtype),
                         cfg, run, jnp.arange(S))
-    return L.rmsnorm_apply(params["enc_ln_f"], x, cfg.norm_eps)
+    return L.rmsnorm_apply(params["enc_ln_f"], x, cfg.norm_eps, run)
 
 
 def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
@@ -143,7 +148,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
     S = x.shape[1]
     x, aux = _scan_blocks(params["blocks"], x, cfg, run, jnp.arange(S),
                           memory=memory)
-    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     if prefix_embeds is not None:
         x = x[:, prefix_embeds.shape[1]:]
     logits = L.unembed_apply(params["embed"], x, run)
@@ -191,6 +196,6 @@ def decode_step(params: Params, tokens: jax.Array, state: DecodeState,
 
     x, caches = jax.lax.scan(body, x, (params["blocks"], state.k, state.v))
     new_k, new_v = caches
-    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps, run)
     logits = L.unembed_apply(params["embed"], x, run)
     return logits, DecodeState(k=new_k, v=new_v, length=state.length + 1)

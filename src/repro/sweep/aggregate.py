@@ -75,6 +75,9 @@ def summary_row(rec: TraceRecord) -> dict[str, Any]:
         "key": rec.meta.get("sweep_point", rec.run_id),
         "config": rec.config,
         "label": _label(rec),
+        # the stamped fused-kernel mode: hbm%/vmem% of an "auto" row is
+        # the before/after counterpart of the same config's "off" row
+        "fusion": str(rec.meta.get("fusion", "off")),
         "measured": measured,
         "machine": rec.machine,
         "wall_s": wall,

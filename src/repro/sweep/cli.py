@@ -36,9 +36,9 @@ from repro.sweep.spec import (SweepSpec, parse_int_list, parse_mesh,
 
 # flags that define the sweep's axes: they conflict with --spec/--smoke
 # (which define the axes themselves) instead of being silently ignored
-_AXIS_FLAGS = ("configs", "seq", "batch", "amp", "mesh", "full")
+_AXIS_FLAGS = ("configs", "seq", "batch", "amp", "fusion", "mesh", "full")
 _AXIS_DEFAULTS = {"configs": "all", "seq": "32", "batch": "4", "amp": "O1",
-                  "mesh": "1x1", "full": False}
+                  "fusion": "off", "mesh": "1x1", "full": False}
 
 
 def spec_from_args(ap: argparse.ArgumentParser, args) -> SweepSpec:
@@ -64,6 +64,8 @@ def spec_from_args(ap: argparse.ArgumentParser, args) -> SweepSpec:
             batches=parse_int_list(flags["batch"]),
             amps=tuple(a.strip() for a in flags["amp"].split(",")
                        if a.strip()),
+            fusions=tuple(f.strip() for f in flags["fusion"].split(",")
+                          if f.strip()),
             meshes=tuple(parse_mesh(m) for m in flags["mesh"].split(",")
                          if m.strip()),
             smoke=not flags["full"])
@@ -164,6 +166,10 @@ def main(argv: Sequence[str] | None = None) -> int:
                      help="comma list of batches (default 4)")
     run.add_argument("--amp", default=None,
                      help="comma list of AMP policies (default O1)")
+    run.add_argument("--fusion", default=None,
+                     help="comma list of fused-kernel modes: off, auto "
+                          "(default off) — 'off,auto' sweeps every config "
+                          "reference vs fused for before/after comparison")
     run.add_argument("--mesh", default=None,
                      help="comma list of DxM meshes (data x model), "
                           "e.g. 1x1,2x4 (default 1x1) — multi-device meshes "

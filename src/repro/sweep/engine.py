@@ -77,9 +77,9 @@ class SweepResult:
 # One point, in-process (lazy jax import — workers set XLA_FLAGS first)
 # --------------------------------------------------------------------------
 
-def _amp_run(amp: str):
+def _point_run(point: SweepPoint):
     from repro.configs.base import RunConfig
-    return RunConfig(amp=amp)
+    return RunConfig(amp=point.amp, fusion=point.fusion)
 
 
 def _build_point(point: SweepPoint):
@@ -91,7 +91,7 @@ def _build_point(point: SweepPoint):
     from repro.trace.cli import build_phase_args
 
     cfg = get_smoke(point.config) if point.smoke else get_config(point.config)
-    run = _amp_run(point.amp)
+    run = _point_run(point)
     model = M.build(cfg)
     phases = build_phase_args(model, run, seq=point.seq, batch=point.batch,
                               concrete=point.measured)

@@ -23,6 +23,7 @@ from typing import Any, Iterable, Mapping, Sequence
 from repro.configs.registry import select_many
 
 AMP_POLICIES = ("O0", "O1", "O2")
+FUSION_MODES = ("off", "auto")
 
 # smoke preset: the CI-sized campaign (≥ 8 configs, CPU, minutes not hours)
 SMOKE_CONFIGS = 8
@@ -44,6 +45,7 @@ class SweepPoint:
     machine: str                    # MachineSpec name the bounds are against
     measured: bool                  # execute + time, or bound-only analytical
     smoke: bool                     # smoke config variant vs full config
+    fusion: str = "off"             # fused-kernel routing (off | auto)
 
     @property
     def n_devices(self) -> int:
@@ -54,8 +56,9 @@ class SweepPoint:
         """Human-readable point id (report rows, progress lines)."""
         mesh = f"m{self.mesh[0]}x{self.mesh[1]}"
         kind = "" if self.measured else "/analytical"
+        fused = "/fused" if self.fusion == "auto" else ""
         return (f"{self.config}/s{self.seq}b{self.batch}/{self.amp}/"
-                f"{mesh}{kind}")
+                f"{mesh}{fused}{kind}")
 
     @property
     def key(self) -> str:
@@ -83,6 +86,8 @@ def invalid_reason(point: SweepPoint) -> str | None:
     """
     if point.amp not in AMP_POLICIES:
         return f"unknown AMP policy {point.amp!r}"
+    if point.fusion not in FUSION_MODES:
+        return f"unknown fusion mode {point.fusion!r}"
     if point.mesh[0] < 1 or point.mesh[1] < 1:
         return f"bad mesh {point.mesh}"
     if point.batch % point.mesh[0]:
@@ -100,6 +105,7 @@ class SweepSpec:
     seqs: tuple[int, ...] = (32,)
     batches: tuple[int, ...] = (4,)
     amps: tuple[str, ...] = ("O1",)
+    fusions: tuple[str, ...] = ("off",)           # fused-kernel routing axis
     meshes: tuple[tuple[int, int], ...] = ((1, 1),)
     machine: str = "cpu-host"
     measure: bool = True
@@ -119,16 +125,19 @@ class SweepSpec:
             for seq in self.seqs:
                 for batch in self.batches:
                     for amp in self.amps:
-                        for mesh in self.meshes:
-                            p = SweepPoint(
-                                config=config, seq=seq, batch=batch, amp=amp,
-                                mesh=tuple(mesh), machine=self.machine,
-                                measured=self.measure, smoke=self.smoke)
-                            reason = invalid_reason(p)
-                            if reason is None:
-                                points.append(p)
-                            else:
-                                skipped.append((p, reason))
+                        for fusion in self.fusions:
+                            for mesh in self.meshes:
+                                p = SweepPoint(
+                                    config=config, seq=seq, batch=batch,
+                                    amp=amp, mesh=tuple(mesh),
+                                    machine=self.machine,
+                                    measured=self.measure, smoke=self.smoke,
+                                    fusion=fusion)
+                                reason = invalid_reason(p)
+                                if reason is None:
+                                    points.append(p)
+                                else:
+                                    skipped.append((p, reason))
         return points, skipped
 
     def to_json(self) -> str:
@@ -144,7 +153,7 @@ class SweepSpec:
             raise ValueError(f"unknown sweep-spec keys {sorted(unknown)}; "
                              f"known: {sorted(fields)}")
         kw = dict(d)
-        for tup in ("configs", "seqs", "batches", "amps"):
+        for tup in ("configs", "seqs", "batches", "amps", "fusions"):
             if tup in kw:
                 kw[tup] = tuple(kw[tup])
         if "meshes" in kw:

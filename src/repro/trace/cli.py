@@ -91,13 +91,14 @@ def build_phase_args(model, run: RunConfig, *, seq: int = 32, batch: int = 4,
 
 def build_measured_phases(config: str, *, smoke: bool = True, seq: int = 32,
                           batch: int = 4, amp: str = "O1", seed: int = 0,
+                          fusion: str = "off",
                           run: RunConfig | None = None):
     """(phases, run): fwd / bwd / opt with *concrete* args, ready to both
     analyze and execute (the measured path needs real buffers anyway)."""
     from repro.models import api as M
 
     cfg = get_smoke(config) if smoke else get_config(config)
-    run = run or RunConfig(amp=amp)
+    run = run or RunConfig(amp=amp, fusion=fusion)
     model = M.build(cfg)
     return build_phase_args(model, run, seq=seq, batch=batch,
                             seed=seed), run
@@ -128,7 +129,7 @@ def cmd_record(args) -> int:
         try:
             phases, run = build_measured_phases(
                 name, smoke=not args.full, seq=args.seq, batch=args.batch,
-                amp=args.amp)
+                amp=args.amp, fusion=args.fusion)
             # dot/conv FLOPs classify onto the AMP policy's compute-dtype
             # ceiling (CPU bf16 legalization, docs/DESIGN.md §9) — keeps
             # trace records consistent with repro.sweep / launch.dryrun
@@ -140,10 +141,13 @@ def cmd_record(args) -> int:
             if args.scale_wall != 1.0:
                 ms = {k: scale_measurement(m, args.scale_wall)
                       for k, m in ms.items()}
+            # the fusion mode is part of the record's identity: a fused
+            # wall time is only comparable against other fused runs
             rec = record_from_phases(
                 name, ms, machine=args.machine,
                 meta={"smoke": not args.full, "seq": args.seq,
                       "batch": args.batch, "amp": args.amp,
+                      "fusion": args.fusion,
                       "scale_wall": args.scale_wall})
             store.append(rec)
         except Exception:
@@ -238,6 +242,10 @@ def main(argv: Sequence[str] | None = None) -> int:
     rec.add_argument("--seq", type=int, default=32)
     rec.add_argument("--batch", type=int, default=4)
     rec.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
+    rec.add_argument("--fusion", default="off", choices=("off", "auto"),
+                     help="fused-kernel routing (repro.kernels.fused); "
+                          "stamped into the record's meta so before/after "
+                          "traces stay distinguishable")
     rec.add_argument("--full", action="store_true",
                      help="full config instead of the smoke variant")
     rec.add_argument("--scale-wall", type=float, default=1.0,

@@ -99,12 +99,20 @@ def compare_last(store: TraceStore, config: str | None = None,
                  threshold: float = 0.10, window: int = 2
                  ) -> list[CellDelta]:
     """Compare the newest run of each config against the run ``window - 1``
-    records earlier (default: the previous one)."""
-    by_config: dict[str, list[TraceRecord]] = {}
+    records earlier (default: the previous one).
+
+    Runs are grouped by (config, fusion mode): a ``fusion="auto"`` trace
+    is a different lowering, not a regression or an improvement of the
+    reference one — interleaved before/after records (the documented
+    ``record`` / ``record --fusion auto`` pair) must never be diffed
+    against each other.
+    """
+    groups: dict[tuple[str, str], list[TraceRecord]] = {}
     for rec in store.records(config):       # one pass over the store
-        by_config.setdefault(rec.config, []).append(rec)
+        key = (rec.config, str(rec.meta.get("fusion", "off")))
+        groups.setdefault(key, []).append(rec)
     out: list[CellDelta] = []
-    for recs in by_config.values():
+    for recs in groups.values():
         recs = recs[-window:]
         if len(recs) < 2:
             continue

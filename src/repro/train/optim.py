@@ -69,7 +69,8 @@ def adamw_init(params: Any, run: RunConfig) -> AdamWState:
 
 def adamw_update(grads: Any, state: AdamWState, params: Any,
                  lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
-                 eps: float = 1e-8, weight_decay: float = 0.1
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 run: "RunConfig | None" = None
                  ) -> tuple[Any, AdamWState]:
     c = state.count + 1
     cf = c.astype(jnp.float32)
@@ -85,11 +86,28 @@ def adamw_update(grads: Any, state: AdamWState, params: Any,
                                              * p.astype(jnp.float32))
         return newp.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
 
+    # fusion="auto": one fused Pallas pass per eligible leaf (moments +
+    # bias correction + decay + write) instead of the elementwise chain;
+    # ineligible leaves keep the reference path above (same math)
+    fops = None
+    if run is not None and getattr(run, "fusion", "off") == "auto":
+        from repro.kernels.fused import ops as fops
+    if fops is not None:
+        def leaf(g, m, v, p):
+            if fops.adamw_eligible(g, m, v, p):
+                return fops.adamw_leaf(g, m, v, p, bc1, bc2, lr=lr, b1=b1,
+                                       b2=b2, eps=eps,
+                                       weight_decay=weight_decay)
+            return _blocked(upd, g, m, v, p)
+    else:
+        def leaf(g, m, v, p):
+            return _blocked(upd, g, m, v, p)
+
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
     flat_m = jax.tree.leaves(state.mu)
     flat_v = jax.tree.leaves(state.nu)
-    out = [_blocked(upd, g, m, v, p)
+    out = [leaf(g, m, v, p)
            for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
     newp = tdef.unflatten([o[0] for o in out])
     newm = tdef.unflatten([o[1] for o in out])
@@ -178,4 +196,4 @@ def optimizer_update(grads: Any, state, params: Any, run: RunConfig,
                      lr: float = 3e-4):
     if run.optimizer == "adafactor":
         return adafactor_update(grads, state, params, lr=lr)
-    return adamw_update(grads, state, params, lr=lr)
+    return adamw_update(grads, state, params, lr=lr, run=run)

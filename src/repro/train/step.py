@@ -11,6 +11,13 @@ Features (task spec §large-scale):
 * dynamic loss scaling (paper §IV-C: AMP's loss-scaling schemes) with
   overflow-skip semantics;
 * optimizer-state update (AdamW / Adafactor) with donated buffers.
+
+``run.fusion = "auto"`` threads through every phase built here: the
+forward/backward route their norm + residual, SwiGLU-epilogue and
+embedding-backward chains through ``repro.kernels.fused``, and the
+optimizer phase runs the fused one-pass AdamW leaf update — the same
+``make_phases`` handles both lowerings, so a reference-vs-fused trace is
+always the same program shape measured twice (docs/DESIGN.md §12).
 """
 
 from __future__ import annotations

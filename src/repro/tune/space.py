@@ -32,7 +32,7 @@ from typing import Any, Callable, Sequence
 from repro.kernels.config import KernelConfig, default_config
 
 PALLAS_KERNELS = ("triad", "fma_chain", "ert_gemm", "flash_attention",
-                  "ssd_scan")
+                  "ssd_scan", "fused_norm", "fused_swiglu", "fused_adamw")
 XLA_KERNELS = ("triad", "fma_chain", "ert_gemm")
 
 # oracle-path defaults (what ops.measure_flops has always used)
@@ -69,6 +69,9 @@ def default_shape(kernel: str, smoke: bool = False) -> tuple[int, ...]:
         "ert_gemm": (512, 512, 512),
         "flash_attention": (4, 1024, 1024, 64),
         "ssd_scan": (1, 2, 512, 32, 32),
+        "fused_norm": (4096, 512),
+        "fused_swiglu": (4096, 1024),
+        "fused_adamw": (1 << 20,),
     }
     tiny = {
         "triad": (1 << 16,),
@@ -76,6 +79,9 @@ def default_shape(kernel: str, smoke: bool = False) -> tuple[int, ...]:
         "ert_gemm": (256, 256, 256),
         "flash_attention": (2, 256, 256, 64),
         "ssd_scan": (1, 2, 128, 16, 16),
+        "fused_norm": (256, 64),
+        "fused_swiglu": (256, 128),
+        "fused_adamw": (1 << 14,),
     }
     table = tiny if smoke else full
     if kernel not in table:
@@ -273,6 +279,107 @@ def _ssd_pallas(shape, dtype, smoke):
     return list(uniq.values())
 
 
+# -- fused epilogue kernels (repro.kernels.fused) --------------------------
+#
+# All three are memory-bound streaming kernels with shape-fixed traffic, so
+# the objective is bytes_per_s over the analytic fused byte count; the row
+# (or element) block is the only knob.  Oversized blocks only measure
+# padding and are skipped — except the hardcoded default, which must stay
+# in every space for the honest before/after pair.
+
+def _row_blocks(rows: int, dflt: int, smoke: bool) -> list[int]:
+    blocks = (128, 1024) if smoke else (128, 256, 1024, 4096)
+    out = []
+    for blk in dict.fromkeys((*blocks, dflt)):
+        if blk > rows and blk != dflt:
+            continue
+        out.append(blk)
+    return out
+
+
+def _fused_norm_pallas(shape, dtype, smoke):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.fused import norm as nk
+    rows, d = shape
+    dt = _dtype(dtype)
+    work = nk.hbm_bytes(rows, d, np.dtype(dt).itemsize, residual=True)
+    dflt = default_config("fused_norm").get("block_rows")
+    out = []
+    for blk in _row_blocks(rows, dflt, smoke):
+
+        def build(blk=blk):
+            import jax
+            key = jax.random.PRNGKey(0)
+            x = jax.random.normal(key, (rows, d)).astype(dt)
+            h = jax.random.normal(key, (rows, d)).astype(dt)
+            s = jnp.ones((d,), jnp.float32)
+            cfg = default_config("fused_norm").replace(block_rows=blk)
+            fn = lambda x_, h_, s_: nk.fused_rmsnorm_residual(
+                x_, h_, s_, config=cfg)
+            return fn, (x, h, s)
+
+        out.append(_cand({"block_rows": blk}, build, work, "bytes_per_s"))
+    return out
+
+
+def _fused_swiglu_pallas(shape, dtype, smoke):
+    import numpy as np
+
+    from repro.kernels.fused import swiglu as sk
+    rows, d = shape
+    dt = _dtype(dtype)
+    work = sk.hbm_bytes(rows, d, np.dtype(dt).itemsize)
+    dflt = default_config("fused_swiglu").get("block_rows")
+    out = []
+    for blk in _row_blocks(rows, dflt, smoke):
+
+        def build(blk=blk):
+            import jax
+            key = jax.random.PRNGKey(0)
+            g = jax.random.normal(key, (rows, d)).astype(dt)
+            u = jax.random.normal(key, (rows, d)).astype(dt)
+            cfg = default_config("fused_swiglu").replace(block_rows=blk)
+            fn = lambda g_, u_: sk.fused_swiglu(g_, u_, config=cfg)
+            return fn, (g, u)
+
+        out.append(_cand({"block_rows": blk}, build, work, "bytes_per_s"))
+    return out
+
+
+def _fused_adamw_pallas(shape, dtype, smoke):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.fused import adamw as ak
+    (n,) = shape
+    dt = _dtype(dtype)
+    work = ak.hbm_bytes(n, np.dtype(dt).itemsize)
+    blocks = (4096, 65536) if smoke else (4096, 16384, 65536, 262144)
+    dflt = default_config("fused_adamw").get("block")
+    out = []
+    for blk in dict.fromkeys((*blocks, dflt)):
+        if blk > n and blk != dflt:
+            continue
+
+        def build(blk=blk):
+            import jax
+            key = jax.random.PRNGKey(0)
+            g = jax.random.normal(key, (n,)).astype(dt)
+            m = jnp.zeros((n,), dt)
+            v = jnp.zeros((n,), dt)
+            p = jax.random.normal(key, (n,)).astype(dt)
+            bc = jnp.asarray(0.1, jnp.float32)
+            cfg = default_config("fused_adamw").replace(block=blk)
+            fn = lambda g_, m_, v_, p_, b_: ak.fused_adamw(
+                g_, m_, v_, p_, b_, b_, config=cfg)
+            return fn, (g, m, v, p, bc)
+
+        out.append(_cand({"block": blk}, build, work, "bytes_per_s"))
+    return out
+
+
 # -- xla (oracle) spaces: machine-characterization ceilings ----------------
 
 def _fma_xla(shape, dtype, smoke):
@@ -341,6 +448,9 @@ _SPACES = {
     ("ert_gemm", "pallas"): _gemm_pallas,
     ("flash_attention", "pallas"): _flash_pallas,
     ("ssd_scan", "pallas"): _ssd_pallas,
+    ("fused_norm", "pallas"): _fused_norm_pallas,
+    ("fused_swiglu", "pallas"): _fused_swiglu_pallas,
+    ("fused_adamw", "pallas"): _fused_adamw_pallas,
     ("triad", "xla"): _triad_xla,
     ("fma_chain", "xla"): _fma_xla,
     ("ert_gemm", "xla"): _gemm_xla,

@@ -243,7 +243,10 @@ def tuned_kernels(store: TuneStore | str | None = None,
 def active_kernel_configs(machine: str = "cpu-host",
                           store: TuneStore | str | None = None,
                           kernels: Sequence[str] = ("flash_attention",
-                                                    "ssd_scan")
+                                                    "ssd_scan",
+                                                    "fused_norm",
+                                                    "fused_swiglu",
+                                                    "fused_adamw")
                           ) -> dict[str, dict[str, Any]]:
     """Per model kernel: what the tune store *offered* at stamp time.
 

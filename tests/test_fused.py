@@ -1,0 +1,283 @@
+"""Oracle parity for every fused kernel (repro.kernels.fused) vs its
+reference, across dtypes (f32/bf16), odd / non-multiple-of-block shapes,
+and under ``jax.grad`` where applicable — plus routing/fallback behaviour
+and the fused-AdamW bitwise-closeness on a real train step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.registry import get_smoke
+from repro.kernels.fused import (fused_adamw, fused_layernorm, fused_rmsnorm,
+                                 fused_rmsnorm_residual, fused_swiglu)
+from repro.kernels.fused import ops as fops
+from repro.models import build, synthetic_batch
+from repro.models import layers as L
+from repro.models.params import init
+from repro.train import optim
+from repro.train.step import init_state, make_train_step
+
+KEY = jax.random.PRNGKey(11)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+# odd rows / odd feature dims / rows far from the block size
+SHAPES = [(8, 64), (100, 96), (257, 100), (1500, 48)]
+
+
+def _tol(dtype):
+    return dict(rtol=1e-5, atol=1e-6) if dtype == jnp.float32 \
+        else dict(rtol=3e-2, atol=3e-2)
+
+
+def _close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **_tol(dtype))
+
+
+def _rms_ref(x, s, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * s.astype(jnp.float32)).astype(x.dtype)
+
+
+class TestNormParity:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_rmsnorm(self, dtype, shape):
+        x = jax.random.normal(KEY, shape).astype(dtype)
+        s = jnp.ones((shape[-1],), jnp.float32) * 1.3
+        _close(fused_rmsnorm(x, s, block_rows=128), _rms_ref(x, s), dtype)
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_rmsnorm_residual(self, dtype, shape):
+        kx, kh = jax.random.split(KEY)
+        x = jax.random.normal(kx, shape).astype(dtype)
+        h = jax.random.normal(kh, shape).astype(dtype)
+        r, y = fused_rmsnorm_residual(x, h, jnp.ones((shape[-1],)),
+                                      block_rows=128)
+        _close(r, x + h, dtype)
+        _close(y, _rms_ref(x + h, jnp.ones((shape[-1],))), dtype)
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_layernorm(self, dtype):
+        x = jax.random.normal(KEY, (37, 100)).astype(dtype)
+        s = jnp.full((100,), 1.2, jnp.float32)
+        b = jnp.full((100,), 0.4, jnp.float32)
+        _close(fused_layernorm(x, s, b, block_rows=16),
+               L.layernorm_apply({"scale": s, "bias": b}, x), dtype)
+
+    def test_rmsnorm_grad_matches_reference(self):
+        x = jax.random.normal(KEY, (33, 64), jnp.float32)
+        s = jnp.full((64,), 1.1, jnp.float32)
+
+        def fused_loss(x_, s_):
+            return jnp.sum(fops.rmsnorm(x_, s_) ** 2)
+
+        def ref_loss(x_, s_):
+            return jnp.sum(_rms_ref(x_, s_) ** 2)
+
+        gx1, gs1 = jax.grad(fused_loss, argnums=(0, 1))(x, s)
+        gx2, gs2 = jax.grad(ref_loss, argnums=(0, 1))(x, s)
+        _close(gx1, gx2, jnp.float32)
+        _close(gs1, gs2, jnp.float32)
+
+
+class TestSwigluParity:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("act", ["silu", "gelu"])
+    def test_matches_ref(self, dtype, shape, act):
+        kg, ku = jax.random.split(KEY)
+        g = jax.random.normal(kg, shape).astype(dtype)
+        u = jax.random.normal(ku, shape).astype(dtype)
+        out = fused_swiglu(g, u, act=act, block_rows=128)
+        a = jax.nn.silu if act == "silu" else jax.nn.gelu
+        ref = (a(g.astype(jnp.float32))
+               * u.astype(jnp.float32)).astype(dtype)
+        _close(out, ref, dtype)
+
+    def test_grad_matches_reference(self):
+        kg, ku = jax.random.split(KEY)
+        g = jax.random.normal(kg, (65, 48), jnp.float32)
+        u = jax.random.normal(ku, (65, 48), jnp.float32)
+
+        def fused_loss(g_, u_):
+            return jnp.sum(fops.swiglu(g_, u_) ** 2)
+
+        def ref_loss(g_, u_):
+            return jnp.sum((jax.nn.silu(g_) * u_) ** 2)
+
+        for a, b in zip(jax.grad(fused_loss, argnums=(0, 1))(g, u),
+                        jax.grad(ref_loss, argnums=(0, 1))(g, u)):
+            _close(a, b, jnp.float32)
+
+    def test_unknown_act_raises(self):
+        g = jnp.ones((4, 8))
+        with pytest.raises(ValueError):
+            fused_swiglu(g, g, act="tanh")
+
+
+class TestAdamWParity:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [17, 4096, 70001])
+    def test_leaf_matches_reference(self, dtype, n):
+        ks = jax.random.split(KEY, 4)
+        g = (jax.random.normal(ks[0], (n,)) * 0.1).astype(dtype)
+        m = (jax.random.normal(ks[1], (n,)) * 0.01).astype(dtype)
+        v = jnp.abs(jax.random.normal(ks[2], (n,)) * 0.01).astype(dtype)
+        p = jax.random.normal(ks[3], (n,)).astype(dtype)
+        bc1, bc2 = jnp.asarray(0.271), jnp.asarray(0.0975)
+
+        p2, m2, v2 = fused_adamw(g, m, v, p, bc1, bc2, block=4096)
+        gf = g.astype(jnp.float32)
+        m2r = 0.9 * m.astype(jnp.float32) + 0.1 * gf
+        v2r = 0.95 * v.astype(jnp.float32) + 0.05 * gf * gf
+        step = (m2r / bc1) / (jnp.sqrt(v2r / bc2) + 1e-8)
+        p2r = (p.astype(jnp.float32)
+               - 3e-4 * (step + 0.1 * p.astype(jnp.float32)))
+        # f32 state: bitwise-close; bf16 state: one storage-ulp (the two
+        # lowerings may round a different f32 intermediate into bf16)
+        tight = (dict(rtol=1e-6, atol=1e-7) if dtype == jnp.float32
+                 else dict(rtol=1e-2, atol=1e-4))
+        np.testing.assert_allclose(np.asarray(p2, np.float32),
+                                   np.asarray(p2r.astype(dtype), np.float32),
+                                   **tight)
+        np.testing.assert_allclose(np.asarray(m2, np.float32),
+                                   np.asarray(m2r.astype(dtype), np.float32),
+                                   **tight)
+        np.testing.assert_allclose(np.asarray(v2, np.float32),
+                                   np.asarray(v2r.astype(dtype), np.float32),
+                                   **tight)
+
+    def test_update_matches_reference_on_tree(self):
+        """Same grads through reference vs fused adamw_update →
+        bitwise-close new params and moments."""
+        params = {"w": jax.random.normal(KEY, (64, 32)),
+                  "b": jnp.zeros((32,))}
+        grads = jax.tree.map(
+            lambda p: jax.random.normal(KEY, p.shape) * 0.01, params)
+        run_off = RunConfig(fusion="off")
+        run_auto = RunConfig(fusion="auto")
+        s0 = optim.adamw_init(params, run_off)
+        p1, s1 = optim.adamw_update(grads, s0, params, run=run_off)
+        p2, s2 = optim.adamw_update(grads, s0, params, run=run_auto)
+        for a, b in zip(jax.tree.leaves((p1, s1.mu, s1.nu)),
+                        jax.tree.leaves((p2, s2.mu, s2.nu))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-7, atol=1e-8)
+
+    def test_fused_on_real_train_step(self):
+        """Identical grads (fusion=off fwd/bwd) through the full train
+        step's optimizer: fused AdamW bitwise-close to reference."""
+        cfg = get_smoke("granite-8b")
+        model = build(cfg)
+        shape = ShapeSpec("t", 16, 2, "train")
+        batch = synthetic_batch(cfg, shape, 2)
+        run = RunConfig(amp="O1", fusion="off")
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        grads = jax.grad(
+            lambda p: model.loss_fn(p, batch, run)[0])(state.params)
+        p_ref, _ = optim.optimizer_update(grads, state.opt, state.params,
+                                          RunConfig(amp="O1", fusion="off"))
+        p_fus, _ = optim.optimizer_update(grads, state.opt, state.params,
+                                          RunConfig(amp="O1", fusion="auto"))
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_fus)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_ineligible_leaf_falls_back(self):
+        """Mismatched moment dtype (int) keeps the reference path."""
+        g = jnp.ones((8,), jnp.int32)
+        assert not fops.adamw_eligible(g, g, g, g)
+
+
+class TestRoutingAndFallback:
+    def test_fusion_off_is_reference_lowering(self):
+        x = jax.random.normal(KEY, (4, 8, 32), jnp.bfloat16)
+        p = {"scale": jnp.ones((32,), jnp.float32)}
+        y_none = L.rmsnorm_apply(p, x)
+        y_off = L.rmsnorm_apply(p, x, run=RunConfig(fusion="off"))
+        np.testing.assert_array_equal(np.asarray(y_none, np.float32),
+                                      np.asarray(y_off, np.float32))
+
+    def test_fused_model_matches_reference_model(self):
+        """End-to-end: fusion="auto" changes the lowering, not the math."""
+        cfg = get_smoke("glm4-9b")
+        model = build(cfg)
+        params = init(jax.random.PRNGKey(0), model.spec)
+        batch = synthetic_batch(cfg, ShapeSpec("t", 32, 2, "train"), 2)
+        l1 = model.loss_fn(params, batch, RunConfig(amp="O0"))[0]
+        l2 = model.loss_fn(params, batch,
+                           RunConfig(amp="O0", fusion="auto"))[0]
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+    def test_fused_grads_match_reference(self):
+        cfg = get_smoke("glm4-9b")
+        model = build(cfg)
+        params = init(jax.random.PRNGKey(0), model.spec)
+        batch = synthetic_batch(cfg, ShapeSpec("t", 32, 2, "train"), 2)
+
+        def loss(p, run):
+            return model.loss_fn(p, batch, run)[0]
+
+        g1 = jax.grad(loss)(params, RunConfig(amp="O0"))
+        g2 = jax.grad(loss)(params, RunConfig(amp="O0", fusion="auto"))
+        errs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))
+                               / (jnp.max(jnp.abs(a)) + 1e-9)), g1, g2)
+        assert max(jax.tree.leaves(errs)) < 5e-3
+
+    def test_train_step_runs_fused(self):
+        cfg = get_smoke("granite-8b")
+        model = build(cfg)
+        run = RunConfig(amp="O1", fusion="auto")
+        state = init_state(model, run, jax.random.PRNGKey(0))
+        step = make_train_step(model, run)
+        batch = synthetic_batch(cfg, ShapeSpec("t", 16, 2, "train"), 2)
+        new_state, metrics = jax.jit(step)(state, batch)
+        assert bool(metrics["grads_finite"])
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(new_state.step) == 1
+
+    def test_ineligible_norm_shape_falls_back(self):
+        """A feature dim past the VMEM cap routes to the reference math."""
+        d = fops.NORM_D_MAX + 1
+        x = jnp.ones((2, d), jnp.float32)
+        s = jnp.ones((d,), jnp.float32)
+        assert not fops.norm_eligible(x, s)
+        y = L.rmsnorm_apply({"scale": s}, x, run=RunConfig(fusion="auto"))
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(L.rmsnorm_apply({"scale": s},
+                                                              x)))
+
+    def test_embed_grad_matches_scatter(self):
+        """One-hot matmul embedding backward ≡ the gather/scatter grad."""
+        V, D = 512, 32
+        table = jax.random.normal(KEY, (V, D), jnp.float32)
+        toks = jax.random.randint(KEY, (4, 16), 0, V)
+
+        def ref(t):
+            return jnp.sum(t.astype(jnp.bfloat16)[toks]
+                           .astype(jnp.float32) ** 2)
+
+        def fused(t):
+            return jnp.sum(
+                fops.embed_with_onehot_grad(t, toks, jnp.bfloat16)
+                .astype(jnp.float32) ** 2)
+
+        g1 = jax.grad(ref)(table)
+        g2 = jax.grad(fused)(table)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_embed_grad_eligibility_cap(self):
+        toks = jnp.zeros((1, 8), jnp.int32)
+        assert fops.embed_grad_eligible(toks, 1024)
+        assert not fops.embed_grad_eligible(
+            toks, fops.ONEHOT_BYTES_MAX)  # 8 * V * 4 over budget

@@ -89,3 +89,60 @@ class TestSSDKernelInModel:
             RunConfig(amp="O0", attn_impl="chunked", attn_chunk=16))
         np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
                                    rtol=1e-4, atol=1e-4)
+
+
+class TestFusionChunkedRouting:
+    """fusion="auto" upgrades the chunked-prefill path to the flash
+    kernel when eligible, and falls back to the chunked reference with
+    identical outputs when not."""
+
+    def test_eligible_routes_to_flash(self):
+        from repro.kernels.fused import ops as fops
+        assert fops.flash_from_chunked_eligible(
+            64, 64, causal=True, has_memory=False, has_cache=False,
+            softmax_f32=True)
+
+    def test_chunked_fused_matches_einsum(self):
+        cfg = get_smoke("glm4-9b")
+        model = build(cfg)
+        params = init(jax.random.PRNGKey(0), model.spec)
+        batch = synthetic_batch(cfg, SHAPE, 2)
+        l1 = model.forward_fn(params, batch, RunConfig(amp="O0"))
+        l2 = model.forward_fn(
+            params, batch,
+            RunConfig(amp="O0", attn_impl="chunked", attn_chunk=16,
+                      fusion="auto"))
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_ineligible_shape_falls_back_identically(self):
+        """S=8 (< the flash block floor) is ineligible: the fused chunked
+        run must be bit-identical to the plain chunked reference."""
+        from repro.kernels.fused import ops as fops
+        assert not fops.flash_from_chunked_eligible(
+            8, 8, causal=True, has_memory=False, has_cache=False,
+            softmax_f32=True)
+        cfg = get_smoke("glm4-9b")
+        model = build(cfg)
+        params = init(jax.random.PRNGKey(0), model.spec)
+        shape = ShapeSpec("t", 8, 2, "train")
+        batch = synthetic_batch(cfg, shape, 2)
+        # fusion still routes norms/swiglu, so compare against the same
+        # fused run with the chunked reference forced (flash ineligible)
+        l_ref = model.forward_fn(
+            params, batch,
+            RunConfig(amp="O0", attn_impl="chunked", attn_chunk=4))
+        l_fused = model.forward_fn(
+            params, batch,
+            RunConfig(amp="O0", attn_impl="chunked", attn_chunk=4,
+                      fusion="auto"))
+        np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_fused),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_bf16_stats_policy_is_ineligible(self):
+        """softmax_f32=False changes the score-statistics dtype — the
+        fp32-stat flash kernel must not silently take over."""
+        from repro.kernels.fused import ops as fops
+        assert not fops.flash_from_chunked_eligible(
+            64, 64, causal=True, has_memory=False, has_cache=False,
+            softmax_f32=False)
