@@ -35,10 +35,18 @@ SUITES = (
     "sweep_smoke",       # repro.sweep: campaign→store→report loop + cache
     "tune_smoke",        # repro.tune: search→store→hit loop
     "fused_bench",       # repro.kernels.fused: census gate + before/after
+    "session_smoke",     # repro.session: whole workflow, one workspace root
 )
 
-DEFAULT_JSON_DIR = "benchmarks/results"
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_json_dir() -> str:
+    """Where BENCH_<ts>.json lands: ``$REPRO_WORKSPACE/bench`` when a
+    workspace is pinned (session-backed discovery, one root for all
+    persistent state), else the legacy ``benchmarks/results``."""
+    from repro.session.workspace import resolve_bench_dir
+    return resolve_bench_dir()
 
 
 def write_json(json_dir: str, results: dict[str, dict]) -> str:
@@ -82,9 +90,11 @@ def main(argv=None) -> int:
                     help="run a single suite (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="print suite names and exit")
-    ap.add_argument("--json-dir", default=DEFAULT_JSON_DIR,
+    ap.add_argument("--json-dir", default=default_json_dir(),
                     help="where BENCH_<timestamp>.json lands "
-                         f"(default {DEFAULT_JSON_DIR}; '' disables)")
+                         f"(default {default_json_dir()}: "
+                         "$REPRO_WORKSPACE/bench when a workspace is "
+                         "pinned, else benchmarks/results; '' disables)")
     args = ap.parse_args(argv)
     if args.list:
         for name in SUITES:

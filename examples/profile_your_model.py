@@ -1,22 +1,22 @@
-"""Profile YOUR model: the methodology as a 3-line library call.
+"""Profile YOUR model: the methodology as a 3-line Session call.
 
-Bring any jax function + abstract inputs; get the paper's full analysis
-(hierarchical roofline chart, per-kernel table, zero-AI census, three-term
-bound) — then the *measured* half: ``measure=True`` executes the same
-compiled executable and ``repro.trace`` folds the wall time back into the
-chart (achieved GFLOP/s, %-of-roofline per kernel).  Shown here on a
-custom MLP-mixer-ish toy model nobody in the repo has ever seen — the
-point is the tool is model-agnostic.
+Bring any jax function + abstract inputs; ``Session.profile`` returns
+the paper's full analysis (hierarchical roofline chart, per-kernel
+table, three-term bound) as one :class:`RooflineResult` — then the
+*measured* half: ``measure=True`` executes the same compiled executable
+and folds the wall time back in (achieved GFLOP/s, %-of-roofline per
+kernel).  Shown here on a custom MLP-mixer-ish toy model nobody in the
+repo has ever seen — the point is the tool is model-agnostic.
 
 Run: ``PYTHONPATH=src python examples/profile_your_model.py``
 """
 
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import (achieved_table, ascii_roofline, get_machine,
-                        kernel_table, profile_fn)
-from repro.trace import achieved_points, measurement_from_profile
+from repro import Session
 
 
 def my_model(params, x):
@@ -30,47 +30,39 @@ def my_model(params, x):
     return x.sum()
 
 
+def loss_and_grad(p, x_):
+    return jax.grad(my_model)(p, x_)
+
+
 D, F, L, B, T = 256, 1024, 4, 8, 128
 params = {"blocks": [
     (jax.ShapeDtypeStruct((D, F), jnp.bfloat16),
      jax.ShapeDtypeStruct((F, D), jnp.bfloat16)) for _ in range(L)]}
 x = jax.ShapeDtypeStruct((B, T, D), jnp.bfloat16)
 
+with tempfile.TemporaryDirectory() as d:
+    # ---- the analytical walk: bounds only, no execution ----------------
+    s = Session(machine="tpu-v5e", workspace=d)
+    res = s.profile(loss_and_grad, args=(params, x), name="my_model/bwd")
+    print(res.render(charts=1, top_kernels=8))
+    print("\nwhat to do next: the dominant term above is the bottleneck; "
+          "kernels hugging the HBM diagonal want fusion (zero-AI census: "
+          f"{res.analyses['my_model/bwd'].zero_ai_census()})")
 
-def loss_and_grad(p, x_):
-    return jax.grad(my_model)(p, x_)
-
-
-machine = get_machine("tpu-v5e")
-res = profile_fn(loss_and_grad, args=(params, x), name="my_model/bwd",
-                 machine=machine)
-print(res.summary())
-print()
-print(ascii_roofline(res.analysis.kernels, machine, title="my model, bwd"))
-print()
-print(kernel_table(res.analysis, machine, top_n=8))
-print("\nwhat to do next: the dominant term above is the bottleneck; "
-      "kernels hugging the HBM diagonal want fusion (zero-AI census: "
-      f"{res.analysis.zero_ai_census()})")
-
-# ---- the measured path: same compiled executable, now executed -----------
-# Off-TPU the honest ceiling set is the host's, so the achieved/%-roofline
-# numbers are reported against the cpu-host machine model; on real TPU
-# hardware pass the TPU spec and the identical code times the device.
-host = get_machine("cpu-host")
-res_m = profile_fn(loss_and_grad, args=(params, x), name="my_model/bwd",
-                   machine=host, measure=True, measure_iters=5,
-                   measure_warmup=2)
-m = measurement_from_profile(res_m, host)
-print()
-print(m.summary())
-print()
-print(achieved_table({"my_model": {"bwd": m}}))
-print()
-print(ascii_roofline(res_m.analysis.kernels, host,
-                     title="my model, bwd (measured)",
-                     achieved=achieved_points(m.kernels)))
-print("\npersist it: repro.trace.TraceStore('trace.jsonl').append("
-      "repro.trace.record_from_phases('my_model', {'bwd': m}, "
-      "machine='cpu-host')) — then `python -m repro.trace compare` "
-      "flags regressions across commits")
+    # ---- the measured path: same compiled executable, now executed -----
+    # Off-TPU the honest ceiling set is the host's, so switch the session
+    # machine to cpu-host; on real TPU hardware keep the TPU spec and the
+    # identical code times the device.
+    host = Session(machine="cpu-host", workspace=d)
+    res_m = host.profile(loss_and_grad, args=(params, x),
+                         name="my_model/bwd", measure=True, iters=5,
+                         warmup=2)
+    print()
+    print(res_m.render(charts=1))              # achieved table + * overlay
+    for lv in res_m.levels("my_model/bwd"):
+        print(f"  {lv.level}: {lv.bytes/1e6:.1f} MB moved, "
+              f"{lv.achieved_bytes_per_s/1e9:.2f} GB/s achieved "
+              f"({100*lv.frac_of_peak:.1f}% of the level's bandwidth)")
+    print("\npersist it: `host.record(<registry config>)` appends the same "
+          "payload to the workspace trace store; `python -m repro compare` "
+          "then flags regressions across commits")

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's workflow in 30 lines.
+"""Quickstart: the paper's workflow in 30 lines — one Session object.
 
 1. characterize the machine (ERT, paper §II-A),
 2. characterize an application (compiled-HLO walk, paper §II-B),
@@ -7,41 +7,25 @@
 Run: ``PYTHONPATH=src python examples/quickstart.py``
 """
 
-import jax
-import jax.numpy as jnp
+import tempfile
 
-from repro.configs.base import RunConfig, ShapeSpec
-from repro.configs.registry import get_smoke
-from repro.core import ascii_roofline, get_machine, kernel_table, profile_fn
-from repro.models import build, input_specs
-from repro.models.params import abstract
+from repro import Session
 
-# -- 1. machine model (datasheet; see benchmarks/ert_ceilings for measured) --
-machine = get_machine("tpu-v5e")
-print(f"machine: {machine.name}, bf16 peak "
-      f"{machine.peak_flops['bf16']/1e12:.0f} TFLOP/s, HBM "
-      f"{machine.hbm.bytes_per_s/1e9:.0f} GB/s, "
-      f"ridge AI = {machine.ridge_point():.0f} FLOPs/byte\n")
+with tempfile.TemporaryDirectory() as d:         # throwaway workspace root
+    s = Session(machine="tpu-v5e", workspace=d)
 
-# -- 2. application: profile one training forward+backward ------------------
-cfg = get_smoke("granite-8b")            # --arch granite-8b, reduced
-model = build(cfg)
-run = RunConfig(amp="O1")                # paper §IV-C: conservative AMP
-shape = ShapeSpec("quickstart", seq_len=64, global_batch=4, kind="train")
+    # -- 1. machine model (datasheet; `s.characterize(empirical=True)`
+    #       measures this host's real ceilings through the tune store) ----
+    machine = s.characterize().machine
+    print(f"machine: {machine.name}, bf16 peak "
+          f"{machine.peak_flops['bf16']/1e12:.0f} TFLOP/s, HBM "
+          f"{machine.hbm.bytes_per_s/1e9:.0f} GB/s, "
+          f"ridge AI = {machine.ridge_point():.0f} FLOPs/byte\n")
 
-def train_bwd(params, batch):
-    return jax.grad(lambda p: model.loss_fn(p, batch, run)[0])(params)
+    # -- 2. application: profile one training step, phase by phase -------
+    result = s.profile("granite-8b", seq=64, batch=4, amp="O1")
 
-result = profile_fn(
-    train_bwd,
-    args=(abstract(model.spec), input_specs(cfg, shape)),
-    name="granite-8b/bwd", machine=machine)
-
-# -- 3. the hierarchical roofline -------------------------------------------
-print(result.summary(), "\n")
-print(ascii_roofline(result.analysis.kernels, machine,
-                     title="granite-8b smoke, backward pass"))
-print()
-print(kernel_table(result.analysis, machine, top_n=10))
-print("\nzero-AI census (paper Table III):",
-      result.analysis.zero_ai_census())
+    # -- 3. the hierarchical roofline ------------------------------------
+    print(result.render(charts=1, top_kernels=10))
+    print("\nzero-AI census (paper Table III):",
+          result.analyses["bwd"].zero_ai_census())

@@ -1,21 +1,20 @@
-"""Run a roofline campaign from Python (the `repro.sweep` library API).
+"""Run a roofline campaign from Python (the Session API).
 
-The CLI (``python -m repro.sweep run``) covers the common cases; this is
-the same campaign as a library call — declare a spec, run it, aggregate —
-for when a hillclimb script wants to sweep programmatically (e.g. sweep
-AMP policies for one family and keep the ranked rows as data, not text).
+The CLI (``python -m repro sweep run``) covers the common cases; this is
+the same campaign as a library call — declare a spec, run it through a
+:class:`Session`, read the ranked rows back as data — for when a
+hillclimb script wants to sweep programmatically (e.g. sweep AMP
+policies for one family and keep the rows, not text).
 
 Run: ``PYTHONPATH=src python examples/sweep_campaign.py``
 """
 
-import os
 import tempfile
 
-from repro.sweep.aggregate import (latest_per_point, render_summary,
-                                   summary_rows, sweep_records)
-from repro.sweep.engine import run_sweep
+from repro import Session
+from repro.sweep.aggregate import (latest_per_point, summary_rows,
+                                   sweep_records)
 from repro.sweep.spec import SweepSpec
-from repro.trace.store import TraceStore
 
 # Declarative campaign: 2 configs x 2 AMP policies, measured on this host.
 # Selectors compose: exact names, "family:<fam>", or "all".
@@ -28,18 +27,20 @@ spec = SweepSpec(
     measure=True, smoke=True, iters=2, warmup=1)
 
 with tempfile.TemporaryDirectory() as d:
-    store_path = os.path.join(d, "sweep.jsonl")
-    result = run_sweep(spec, store_path=store_path, workers=0,
-                       progress=print)
-    print(f"\n{result.n_ok} ok / {result.n_failed} failed "
-          f"/ {len(result.skipped)} skipped\n")
+    s = Session(machine="cpu-host", workspace=d)
+    result = s.sweep(spec, workers=0, progress=print)
+    sw = result.data
+    print(f"\n{sw.n_ok} ok / {sw.n_failed} failed "
+          f"/ {len(sw.skipped)} skipped\n")
 
-    # aggregate from the store only — a campaign run elsewhere reports the
-    # same way (ship the JSONL, not the host)
-    recs = latest_per_point(sweep_records(TraceStore(store_path), "example"))
-    print(render_summary(recs))
+    # the ranked cross-config table is pre-rendered on the result ...
+    print(result.text)
 
-    # the rows behind the table are plain dicts: feed a hillclimb with them
+    # ... and the rows behind it are plain dicts, aggregated from the
+    # workspace store only — a campaign run elsewhere reports the same
+    # way (ship the workspace, not the host)
+    recs = latest_per_point(sweep_records(s.workspace.sweep_store,
+                                          "example"))
     best = max(summary_rows(recs), key=lambda r: r["pct_of_roofline"])
     print(f"\nbest point: {best['label']} at "
           f"{100 * best['pct_of_roofline']:.1f}% of roofline "

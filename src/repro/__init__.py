@@ -1,0 +1,35 @@
+"""repro — hierarchical roofline performance analysis for deep learning.
+
+The package reproduces the paper's automated methodology end to end;
+:mod:`repro.session` is the front door:
+
+    from repro import Session
+    s = Session(machine="cpu-host")
+    s.characterize()                     # ERT ceilings (paper §II-A)
+    s.profile("minitron-4b")             # analytical HLO walk (§II-B)
+    s.record("minitron-4b")              # measured trace into the store
+    s.compare("minitron-4b")             # cross-run regression check
+
+and ``python -m repro`` is the same workflow as a CLI.  Subsystems:
+
+* :mod:`repro.core`   — machine model, HLO analysis, roofline, report
+* :mod:`repro.trace`  — time-based roofline: measure / persist / compare
+* :mod:`repro.sweep`  — cross-config campaign engine
+* :mod:`repro.tune`   — empirical kernel autotuner
+* :mod:`repro.kernels` — Pallas kernels (ERT, flash attention, fused, ...)
+
+This ``__init__`` imports nothing at module scope: sweep worker
+processes must import ``repro.*`` *before* fixing their XLA device
+count, so the top of the tree stays jax-free and lazy.
+"""
+
+from typing import Any
+
+__all__ = ["Session", "Workspace", "RooflineResult"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in __all__:
+        import repro.session as _session
+        return getattr(_session, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

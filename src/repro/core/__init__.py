@@ -27,6 +27,6 @@ from repro.core.profiler import (  # noqa: F401
     profile_fn, profile_phases, time_compiled, time_fn,
 )
 from repro.core.report import (  # noqa: F401
-    achieved_table, ascii_roofline, kernel_table, sweep_table, terms_table,
-    zero_ai_table,
+    achieved_table, ascii_roofline, kernel_table, machine_table, sweep_table,
+    terms_table, zero_ai_table,
 )

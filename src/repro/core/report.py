@@ -241,3 +241,29 @@ def terms_table(results: dict[str, "object"]) -> str:
                    f"{t.memory_s*1e3:>9.3f}ms{t.collective_s*1e3:>9.3f}ms"
                    f"{t.dominant:>12}{t.roofline_fraction:>10.3f}")
     return "\n".join(out)
+
+
+def machine_table(machine: MachineSpec) -> str:
+    """Machine-characterization summary (paper §II-A as a table).
+
+    One row per compute ceiling (with its HBM ridge point) and per memory
+    level — the numbers every chart in this repo draws its roofs from.
+    Consumed by ``repro.session`` / ``python -m repro characterize``.
+    """
+    src = "empirical (measured)" if machine.empirical else "datasheet"
+    out = [f"machine {machine.name} [{src}]",
+           f"{'ceiling':<22}{'peak':>14}{'ridge@hbm':>12}"]
+    for cls in sorted(machine.peak_flops):
+        peak = machine.peak_flops[cls]
+        out.append(f"{'compute/' + cls:<22}{_fmt_si(peak, 'FLOP/s'):>14}"
+                   f"{machine.ridge_point(cls):>10.1f} AI")
+    for lv in machine.mem_levels:
+        cap = (f"cap {_fmt_si(lv.capacity_bytes, 'B')}"
+               if lv.capacity_bytes else "uncapped")
+        out.append(f"{'memory/' + lv.name:<22}{_fmt_si(lv.bytes_per_s, 'B/s'):>14}"
+                   f"  {cap}")
+    out.append(f"{'network/ici':<22}"
+               f"{_fmt_si(machine.ici_bytes_per_s * machine.ici_links, 'B/s'):>14}"
+               f"  {machine.ici_links} link(s)")
+    out.append(f"{'network/dcn':<22}{_fmt_si(machine.dcn_bytes_per_s, 'B/s'):>14}")
+    return "\n".join(out)

@@ -1,0 +1,56 @@
+"""repro.session — one Session/Workspace API over the whole methodology.
+
+The paper's workflow (machine characterization → application
+characterization → measured trace → comparison) as a single facade:
+
+* :class:`Workspace` — one root directory (``REPRO_WORKSPACE``) owning
+  the trace, sweep and tune stores plus a shared machine-provenance
+  header;
+* :class:`Session` — ``characterize`` / ``profile`` / ``record`` /
+  ``report`` / ``sweep`` / ``tune`` / ``compare`` as methods, each
+  returning a :class:`RooflineResult`;
+* :class:`RooflineResult` — machine + per-level achieved/bound +
+  provenance, rendered through the existing ``repro.core.report``
+  helpers.
+
+``python -m repro`` (``repro.cli``) is this package as a CLI.
+
+This ``__init__`` is lazy (PEP 562) and the submodules import nothing
+heavy at module scope: ``repro.sweep.engine`` pulls in
+``repro.session.workspace`` — and thereby this package — *before* its
+spawn-pool workers fix their XLA device count, so nothing on this
+import path may load jax.  The heavy subsystems load inside methods.
+"""
+
+from typing import Any
+
+from repro.session.workspace import (  # noqa: F401  (stdlib-only module)
+    WORKSPACE_ENV, Workspace, default_workspace_root, resolve_bench_dir,
+    resolve_sweep_cache, resolve_sweep_store, resolve_trace_store,
+    resolve_tune_store,
+)
+
+_LAZY = {
+    "KINDS": "repro.session.result",
+    "LevelStat": "repro.session.result",
+    "RooflineResult": "repro.session.result",
+    "payload_from_profile": "repro.session.result",
+    "Session": "repro.session.session",
+    "TRAIN_PHASES": "repro.session.session",
+}
+
+__all__ = [
+    "KINDS", "LevelStat", "RooflineResult", "Session", "TRAIN_PHASES",
+    "WORKSPACE_ENV", "Workspace", "default_workspace_root",
+    "payload_from_profile", "resolve_bench_dir", "resolve_sweep_cache",
+    "resolve_sweep_store", "resolve_trace_store", "resolve_tune_store",
+]
+
+
+def __getattr__(name: str) -> Any:
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

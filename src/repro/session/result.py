@@ -1,0 +1,194 @@
+"""RooflineResult: the one return type of every Session method.
+
+Every step of the paper's workflow — characterize, profile, record,
+report, sweep, tune, compare — used to return a different shape
+(MachineSpec, {phase: ProfileResult}, TraceRecord, SweepResult, ...).
+A :class:`RooflineResult` normalizes them: the machine the numbers are
+against, per-phase payloads in the trace-store schema (so the existing
+``repro.core.report`` helpers render them unchanged), per-memory-level
+achieved-vs-bound stats, and provenance (workspace root, git SHA, store
+paths touched).  ``render()`` is the human view; the structured fields
+are the programmatic one.
+
+Import-light on purpose: jax and the report helpers load lazily inside
+``render()`` so ``repro.session`` stays importable everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TYPE_CHECKING
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.core.machine import MachineSpec
+
+#: RooflineResult.kind values, in paper-workflow order.
+KINDS = ("characterize", "profile", "record", "report", "sweep", "tune",
+         "compare")
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelStat:
+    """Achieved vs bound at one memory level (the hierarchical view)."""
+
+    level: str                       # "vmem" | "hbm"
+    bytes: float                     # per-device traffic at this level
+    bound_s: float                   # bytes / level bandwidth
+    achieved_bytes_per_s: float      # bytes / measured wall (0 = analytical)
+    frac_of_peak: float              # achieved / level bandwidth (0 = n/a)
+
+
+def payload_from_profile(res: Any) -> dict[str, Any]:
+    """Trace-schema phase payload from an *analytical* ProfileResult.
+
+    The measured path goes through ``repro.trace`` attribution instead
+    (``measurement_from_profile`` + ``phase_payload``), which fills the
+    wall/achieved/kernel fields this stub leaves at zero.
+    """
+    t = res.terms
+    return {
+        "wall_s": res.wall_s or 0.0,
+        "iters": res.measure_iters,
+        "achieved_flops_per_s": 0.0,
+        "pct_of_roofline": 0.0,
+        "bound_overlap_s": t.bound_overlap_s,
+        "bound_serial_s": t.bound_serial_s,
+        "compute_s": t.compute_s,
+        "memory_s": t.memory_s,
+        "collective_s": t.collective_s,
+        "dominant": t.dominant,
+        "flops": res.analysis.total_flops,
+        "hbm_bytes": res.analysis.total_hbm_bytes,
+        "vmem_bytes": res.analysis.total_vmem_bytes,
+        "kernels": [],
+    }
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    """Machine + per-level achieved/bound + provenance, for one step."""
+
+    kind: str                        # one of KINDS
+    name: str                        # config / campaign / kernel-set label
+    machine: MachineSpec             # the model the bounds are against
+    provenance: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: phase name -> trace-schema payload dict (may be empty for kinds
+    #: that have no phase structure, e.g. tune)
+    phases: dict[str, dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
+    #: phase name -> ModuleAnalysis, when the analytical walk ran in-process
+    analyses: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: pre-rendered kind-specific body (sweep summary, tune winners,
+    #: compare deltas, machine table) — ``render()`` includes it verbatim
+    text: str = ""
+    #: kind-specific structured payload (ProfileResults, TraceRecord(s),
+    #: SweepResult, TuneOutcomes, CellDeltas)
+    data: Any = None
+    #: CLI exit status this result implies (compare: 1 on regression)
+    exit_code: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown RooflineResult kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+    # -- structured views ------------------------------------------------
+    @property
+    def measured(self) -> bool:
+        return any(float(p.get("wall_s", 0.0)) > 0
+                   for p in self.phases.values())
+
+    def levels(self, phase: str) -> list[LevelStat]:
+        """Per-memory-level achieved/bound for one phase (hierarchical
+        roofline, collapsed to the level axis)."""
+        p = self.phases[phase]
+        wall = float(p.get("wall_s", 0.0))
+        out = []
+        for lv in self.machine.mem_levels:
+            nbytes = float(p.get(f"{lv.name}_bytes", 0.0))
+            achieved = nbytes / wall if wall else 0.0
+            out.append(LevelStat(
+                level=lv.name, bytes=nbytes,
+                bound_s=nbytes / lv.bytes_per_s if lv.bytes_per_s else 0.0,
+                achieved_bytes_per_s=achieved,
+                frac_of_peak=achieved / lv.bytes_per_s
+                if lv.bytes_per_s else 0.0))
+        return out
+
+    def summary(self) -> str:
+        """One line: what happened, against which machine."""
+        bits = [f"[{self.kind}] {self.name}", f"machine={self.machine.name}"]
+        if self.phases:
+            bits.append(f"phases={','.join(self.phases)}")
+            if self.measured:
+                wall = sum(float(p.get("wall_s", 0.0))
+                           for p in self.phases.values())
+                bits.append(f"wall={wall*1e3:.3f}ms")
+        ws = self.provenance.get("workspace")
+        if ws:
+            bits.append(f"workspace={ws}")
+        return " ".join(bits)
+
+    # -- rendering (existing report helpers, lazily imported) ------------
+    def render(self, charts: int = 0, top_kernels: int = 10) -> str:
+        """Human-readable report for this step.
+
+        ``charts`` > 0 additionally renders up to that many per-phase
+        hierarchical roofline charts (needs in-process ``analyses``; stored
+        records re-render charts through ``repro.sweep.aggregate``).
+        """
+        from repro.core.report import (achieved_table, ascii_roofline,
+                                       kernel_table, machine_table,
+                                       terms_table)
+
+        parts = [self.summary()]
+        if self.kind == "characterize":
+            parts.append(self.text or machine_table(self.machine))
+        elif self.kind in ("profile", "record", "report"):
+            if self.measured:
+                parts.append(achieved_table({self.name: self.phases}))
+            elif self.data is not None and self.kind == "profile":
+                parts.append(terms_table(
+                    {f"{self.name}/{ph}": res
+                     for ph, res in self.data.items()}))
+            n = 0
+            for ph, analysis in self.analyses.items():
+                if self.kind == "profile":
+                    parts.append(f"-- {ph} --\n"
+                                 + kernel_table(analysis, self.machine,
+                                                top_n=top_kernels))
+                if n < charts:
+                    parts.append(ascii_roofline(
+                        analysis.kernels, self.machine,
+                        title=f"{self.name}/{ph}",
+                        achieved=self._achieved_points(ph)))
+                    n += 1
+            if self.text:
+                parts.append(self.text)
+        else:                                   # sweep / tune / compare
+            parts.append(self.text)
+        return "\n\n".join(p for p in parts if p)
+
+    def _achieved_points(self, phase: str) -> list[tuple[float, float]]:
+        pts = []
+        for k in self.phases.get(phase, {}).get("kernels", ()):
+            ai = float(k.get("ai_hbm", 0.0))
+            fs = float(k.get("achieved_flops_per_s", 0.0))
+            if ai > 0 and fs > 0:
+                pts.append((ai, fs))
+        return pts
+
+
+def phases_from_record(rec: Any) -> dict[str, dict[str, Any]]:
+    """Phase payloads of a stored TraceRecord (defensive copy)."""
+    return {name: dict(p) for name, p in rec.phases.items()}
+
+
+def provenance(workspace: Any = None, **extra: Any) -> dict[str, Any]:
+    """The provenance dict every Session method stamps into its result."""
+    from repro.trace.store import git_sha
+    out: dict[str, Any] = {"git_sha": git_sha()}
+    if workspace is not None:
+        out["workspace"] = workspace.root
+    out.update(extra)
+    return out

@@ -1,0 +1,323 @@
+"""Session: the paper's workflow as one object.
+
+The hierarchical-roofline methodology is a pipeline — characterize the
+machine (ERT, §II-A), characterize the application (compiled-HLO walk,
+§II-B), fold measured wall time in (the time-based companion paper),
+then compare runs over time.  Before this class, each step lived behind
+a different entry point with its own store.  A :class:`Session` binds
+them: one machine model, one :class:`~repro.session.workspace.Workspace`
+(one root for all three stores), and the workflow as first-class methods
+
+    characterize → profile → record → report → sweep / tune → compare
+
+every one returning a :class:`~repro.session.result.RooflineResult`.
+Callers never touch ``compile_fn`` / ``profile_fn`` / store classes
+directly; ``python -m repro`` is this class as a CLI.
+
+Importing this module is cheap and jax-free; constructing a Session
+resolves the machine model (which loads ``repro.core``), and the heavy
+subsystems (jax compilation, the model registry, the engines) load
+inside the methods that need them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, Sequence, TYPE_CHECKING
+
+from repro.session.result import (RooflineResult, payload_from_profile,
+                                  phases_from_record, provenance)
+from repro.session.workspace import Workspace
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.core.machine import MachineSpec
+
+#: phases of one training step, in execution order (the paper's split)
+TRAIN_PHASES = ("fwd", "bwd", "opt")
+
+
+def _matmul_class(run: Any) -> str | None:
+    """dot/conv ceiling class for an AMP policy (docs/DESIGN.md §9)."""
+    import jax.numpy as jnp
+    return "bf16" if run.compute_dtype == jnp.bfloat16 else None
+
+
+class Session:
+    """One analysis session: a machine model + a workspace + the workflow.
+
+    ``machine`` is a :class:`MachineSpec` or a registry name
+    (``cpu-host``, ``tpu-v5e``, ...); ``workspace`` is a
+    :class:`Workspace`, a root path, or ``None`` for the default root
+    (``REPRO_WORKSPACE`` > ``./.repro-workspace`` in a checkout >
+    ``~/.repro``).
+    """
+
+    def __init__(self, machine: "MachineSpec | str" = "cpu-host",
+                 workspace: Workspace | str | None = None):
+        from repro.core.machine import MachineSpec, get_machine
+        self.machine = (machine if isinstance(machine, MachineSpec)
+                        else get_machine(machine))
+        self.workspace = (workspace if isinstance(workspace, Workspace)
+                          else Workspace(workspace))
+
+    def __repr__(self) -> str:
+        return (f"Session(machine={self.machine.name!r}, "
+                f"workspace={self.workspace.root!r})")
+
+    def _provenance(self, **extra: Any) -> dict[str, Any]:
+        return provenance(self.workspace, machine=self.machine.name, **extra)
+
+    # -- 1. machine characterization (paper §II-A) -----------------------
+    def characterize(self, empirical: bool = False, tuned: bool = True,
+                     smoke: bool = False) -> RooflineResult:
+        """Machine model: datasheet, or measured ERT ceilings of this host.
+
+        ``empirical=True`` runs the ERT micro-kernel suite against this
+        host (``tuned=True`` = best-of-tuned winners through the
+        *workspace's* tune store, the honest mode; searches persist, so a
+        second characterization is a pure store hit).  Either way the
+        resulting machine becomes the session's, every later bound is
+        against it, and the workspace header records it.
+        """
+        if empirical:
+            from repro.core.machine import empirical_cpu_spec
+            self.machine = empirical_cpu_spec(
+                tuned=tuned, store=self.workspace.tune_store if tuned
+                else None, smoke=smoke)
+        self.workspace.write_header(self.machine.name)
+        from repro.core.report import machine_table
+        return RooflineResult(
+            kind="characterize", name=self.machine.name,
+            machine=self.machine,
+            provenance=self._provenance(
+                empirical=empirical,
+                tune_store=self.workspace.tune_path if empirical and tuned
+                else None),
+            text=machine_table(self.machine))
+
+    # -- 2. application characterization (paper §II-B) -------------------
+    def profile(self, target: str | Callable, args: Sequence[Any] = (),
+                *, name: str | None = None,
+                phases: Sequence[str] = TRAIN_PHASES,
+                seq: int = 32, batch: int = 4, amp: str = "O1",
+                fusion: str = "off", smoke: bool = True,
+                measure: bool = False, iters: int = 5, warmup: int = 2,
+                **profile_kw: Any) -> RooflineResult:
+        """Analytical HLO walk of a registry config — or of *your* jax
+        function (pass a callable + ``args``; ShapeDtypeStructs fine).
+
+        ``measure=True`` additionally executes the same compiled
+        executables and attributes wall time (``repro.trace``); the
+        result then carries achieved/%-of-roofline per phase and is
+        ready for :meth:`record`-style rendering, but nothing is stored
+        — :meth:`record` is the persisting variant.
+        """
+        from repro.core.profiler import profile_fn
+
+        if callable(target):
+            label = name or getattr(target, "__name__", "fn")
+            phase_args: Mapping[str, tuple] = {label: (target, tuple(args))}
+            mm = profile_kw.pop("matmul_class", None)
+        else:
+            label = name or target
+            phase_args, run = self._build_phases(
+                target, seq=seq, batch=batch, amp=amp, fusion=fusion,
+                smoke=smoke, concrete=measure)
+            phase_args = {ph: pa for ph, pa in phase_args.items()
+                          if ph in phases}
+            mm = _matmul_class(run)
+
+        results = {ph: profile_fn(fn, args=a, name=ph, machine=self.machine,
+                                  measure=measure, measure_iters=iters,
+                                  measure_warmup=warmup, matmul_class=mm,
+                                  **profile_kw)
+                   for ph, (fn, a) in phase_args.items()}
+        if measure:
+            from repro.trace.collector import measurement_from_profile
+            from repro.trace.store import phase_payload
+            payloads = {ph: phase_payload(
+                measurement_from_profile(res, self.machine))
+                for ph, res in results.items()}
+        else:
+            payloads = {ph: payload_from_profile(res)
+                        for ph, res in results.items()}
+        return RooflineResult(
+            kind="profile", name=label, machine=self.machine,
+            provenance=self._provenance(measured=measure),
+            phases=payloads,
+            analyses={ph: res.analysis for ph, res in results.items()},
+            data=results)
+
+    # -- 3. measured trace into the store (time-based roofline) ----------
+    def record(self, config: str, *, seq: int = 32, batch: int = 4,
+               amp: str = "O1", fusion: str = "off", smoke: bool = True,
+               iters: int = 5, warmup: int = 2,
+               meta: Mapping[str, Any] | None = None) -> RooflineResult:
+        """Measure one config's train phases and append a provenance-
+        stamped record to the workspace trace store."""
+        from repro.trace.collector import collect_phases
+        from repro.trace.store import record_from_phases
+
+        phase_args, run = self._build_phases(
+            config, seq=seq, batch=batch, amp=amp, fusion=fusion,
+            smoke=smoke, concrete=True)
+        ms = collect_phases(phase_args, machine=self.machine, iters=iters,
+                            warmup=warmup, matmul_class=_matmul_class(run))
+        rec = record_from_phases(
+            config, ms, machine=self.machine.name,
+            meta={"smoke": smoke, "seq": seq, "batch": batch, "amp": amp,
+                  "fusion": fusion, **dict(meta or {})})
+        self.workspace.trace_store.append(rec)
+        self.workspace.write_header(self.machine.name)
+        from repro.trace.timeline import ascii_timeline, build_timeline
+        return RooflineResult(
+            kind="record", name=config, machine=self.machine,
+            provenance=self._provenance(run_id=rec.run_id,
+                                        store=self.workspace.trace_path),
+            phases=phases_from_record(rec),
+            text=ascii_timeline(build_timeline(ms)),
+            data=rec)
+
+    # -- 4. read back without re-running ---------------------------------
+    def report(self, config: str | None = None) -> RooflineResult:
+        """Newest stored record for ``config`` (or the newest record of
+        any config) from the workspace trace store."""
+        store = self.workspace.trace_store
+        recs = store.last(config, n=1)
+        if not recs:
+            which = f"config {config!r}" if config else "any config"
+            raise LookupError(
+                f"no records for {which} in {self.workspace.trace_path} — "
+                "run Session.record() (or `python -m repro record`) first")
+        rec = recs[0]
+        from repro.core.machine import get_machine
+        machine = (self.machine if rec.machine == self.machine.name
+                   else get_machine(rec.machine))
+        from repro.trace.timeline import ascii_timeline, timeline_from_record
+        return RooflineResult(
+            kind="report", name=rec.config, machine=machine,
+            provenance=self._provenance(run_id=rec.run_id,
+                                        git_sha=rec.git_sha,
+                                        store=self.workspace.trace_path),
+            phases=phases_from_record(rec),
+            text=ascii_timeline(timeline_from_record(rec)),
+            data=rec)
+
+    # -- 5. cross-config campaigns ---------------------------------------
+    def sweep(self, spec: Any = None, *, smoke: bool = False,
+              workers: int | None = None,
+              progress: Callable[[str], None] | None = None,
+              **axes: Any) -> RooflineResult:
+        """Run a campaign into the workspace sweep store and summarize.
+
+        Pass a ready :class:`~repro.sweep.spec.SweepSpec`, ``smoke=True``
+        for the CI preset, or axes as keywords
+        (``configs=("minitron-4b",), seqs=(16,), amps=("O0", "O1")``...).
+        """
+        from repro.sweep.aggregate import (latest_per_point, render_summary,
+                                           sweep_records)
+        from repro.sweep.engine import run_sweep
+        from repro.sweep.spec import SweepSpec, smoke_spec
+
+        if spec is None:
+            if smoke:
+                # the preset hardcodes cpu-host; the session's machine is
+                # what the result and workspace header will claim, so the
+                # stored records must be bounded against the same model
+                import dataclasses
+                spec = dataclasses.replace(smoke_spec(),
+                                           machine=self.machine.name)
+            else:
+                spec = SweepSpec(machine=self.machine.name, **axes)
+        elif axes:
+            raise TypeError(f"pass axes ({sorted(axes)}) or a spec, "
+                            "not both")
+        result = run_sweep(spec, store_path=self.workspace.sweep_path,
+                           cache_dir=self.workspace.sweep_cache_dir,
+                           workers=workers, progress=progress)
+        self.workspace.write_header(self.machine.name)
+        recs = latest_per_point(sweep_records(self.workspace.sweep_store,
+                                              spec.name))
+        return RooflineResult(
+            kind="sweep", name=spec.name, machine=self.machine,
+            provenance=self._provenance(store=self.workspace.sweep_path,
+                                        n_ok=result.n_ok,
+                                        n_failed=result.n_failed),
+            text=render_summary(recs) if recs else "(no points stored)",
+            data=result,
+            exit_code=1 if result.n_failed else 0)
+
+    # -- 6. kernel autotuning (feeds the empirical ceilings) -------------
+    def tune(self, kernels: Sequence[str] | None = None, *,
+             backend: str = "pallas", smoke: bool = False,
+             ceilings: bool = False, force: bool = False,
+             iters: int = 3, warmup: int = 1) -> RooflineResult:
+        """Search kernel configs into the workspace tune store (a point
+        already stored is a pure hit — no re-timing)."""
+        from repro.tune import search, tune_ceilings
+        from repro.tune import space as sp
+
+        known = sp.XLA_KERNELS if backend == "xla" else sp.PALLAS_KERNELS
+        kernels = list(kernels) if kernels else list(known)
+        bad = sorted(set(kernels) - set(known))
+        if bad:
+            raise KeyError(f"no {backend} search space for {bad}; "
+                           f"valid: {sorted(known)}")
+        store = self.workspace.tune_store
+        outcomes = {k: search(k, machine=self.machine.name, backend=backend,
+                              store=store, iters=iters, warmup=warmup,
+                              smoke=smoke, force=force)
+                    for k in kernels}
+        if ceilings or smoke:
+            outcomes.update(tune_ceilings(
+                machine=self.machine.name, store=store, iters=iters,
+                warmup=warmup, smoke=smoke, force=force))
+        self.workspace.write_header(self.machine.name)
+        return RooflineResult(
+            kind="tune", name=",".join(kernels), machine=self.machine,
+            provenance=self._provenance(store=self.workspace.tune_path,
+                                        n_winners=len(list(store.keys()))),
+            text="\n".join(o.describe() for o in outcomes.values()),
+            data=outcomes)
+
+    # -- 7. regression comparison across runs ----------------------------
+    def compare(self, config: str | None = None, *, base: str | None = None,
+                new: str | None = None, threshold: float = 0.10,
+                window: int = 2) -> RooflineResult:
+        """Diff stored runs (newest-vs-previous per config, or two
+        explicit run ids); ``exit_code`` is 1 when any cell regressed."""
+        from repro.trace.compare import (compare_last, compare_records,
+                                         format_deltas, has_regressions)
+        store = self.workspace.trace_store
+        if base or new:
+            if not (base and new):
+                raise ValueError("base and new run ids go together")
+            b, n = store.run(base), store.run(new)
+            if b is None or n is None:
+                raise LookupError(
+                    f"run id not found in {self.workspace.trace_path}")
+            deltas = compare_records(b, n, threshold)
+        else:
+            deltas = compare_last(store, config, threshold, window=window)
+        return RooflineResult(
+            kind="compare", name=config or "all", machine=self.machine,
+            provenance=self._provenance(store=self.workspace.trace_path,
+                                        threshold=threshold),
+            text=format_deltas(deltas),
+            data=deltas,
+            exit_code=1 if has_regressions(deltas) else 0)
+
+    # -- shared phase construction (the one registry path) ---------------
+    def _build_phases(self, config: str, *, seq: int, batch: int, amp: str,
+                      fusion: str, smoke: bool, concrete: bool):
+        """(phase args, run) for a registry config — concrete buffers for
+        the measured path, ShapeDtypeStructs for the analytical one."""
+        from repro.configs.base import RunConfig
+        from repro.configs.registry import get_config, get_smoke
+        from repro.models import api as M
+        from repro.trace.cli import build_phase_args
+
+        cfg = get_smoke(config) if smoke else get_config(config)
+        run = RunConfig(amp=amp, fusion=fusion)
+        model = M.build(cfg)
+        return build_phase_args(model, run, seq=seq, batch=batch,
+                                concrete=concrete), run

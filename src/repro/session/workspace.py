@@ -1,0 +1,257 @@
+"""Workspace: one root directory for every persistent store.
+
+PRs 1-4 grew three separately-located stores — the trace JSONL
+(``repro.trace``), the sweep JSONL (``repro.sweep``) and the tune JSON
+(``repro.tune``) — each with its own default path and, for tune, its own
+env var.  A :class:`Workspace` consolidates them under one root:
+
+.. code-block:: text
+
+    <root>/                      REPRO_WORKSPACE (or the default below)
+    ├── workspace.json           machine-provenance header (shared)
+    ├── trace.jsonl              measured runs        (repro.trace.TraceStore)
+    ├── sweep.jsonl              campaign points      (repro.trace.TraceStore)
+    ├── sweep_cache/             per-point analysis cache (repro.sweep)
+    ├── tune.json                autotuner winners    (repro.tune.TuneStore)
+    └── bench/                   benchmarks.run BENCH_<ts>.json output
+
+Resolution order (tested in ``tests/test_session.py``):
+
+1. an explicit path (constructor arg / ``--store`` / ``--workspace``),
+2. the ``REPRO_WORKSPACE`` environment variable,
+3. legacy per-store defaults (``benchmarks/results/...``) for the old
+   CLIs — no behavior regression — while :class:`Workspace` itself falls
+   back to ``./.repro-workspace`` inside a checkout (a ``.git`` sibling)
+   and ``~/.repro`` elsewhere.
+
+``REPRO_TUNE_STORE`` keeps working as a per-store override but warns:
+``REPRO_WORKSPACE`` is the one knob.
+
+This module imports nothing heavy at module scope (no jax, no stores):
+sweep worker processes must be able to import ``repro.*`` before fixing
+their XLA device count, and the store classes are only pulled in by the
+lazy ``*_store`` properties.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Any, TYPE_CHECKING
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.trace.store import TraceStore
+    from repro.tune.store import TuneStore
+
+WORKSPACE_ENV = "REPRO_WORKSPACE"
+HEADER_SCHEMA_VERSION = 1
+
+# in-workspace file names (one root, fixed layout)
+TRACE_FILENAME = "trace.jsonl"
+SWEEP_FILENAME = "sweep.jsonl"
+SWEEP_CACHE_DIRNAME = "sweep_cache"
+TUNE_FILENAME = "tune.json"
+HEADER_FILENAME = "workspace.json"
+BENCH_DIRNAME = "bench"
+
+# legacy per-store defaults, kept verbatim for the old CLIs' no-env path
+LEGACY_TRACE_STORE = "benchmarks/results/trace.jsonl"
+LEGACY_SWEEP_STORE = "benchmarks/results/sweep.jsonl"
+LEGACY_SWEEP_CACHE = "benchmarks/results/sweep_cache"
+LEGACY_TUNE_STORE = "benchmarks/results/tune.json"
+LEGACY_BENCH_DIR = "benchmarks/results"
+
+
+def env_workspace_root() -> str | None:
+    """The ``REPRO_WORKSPACE`` root, or ``None`` when unset/empty."""
+    return os.environ.get(WORKSPACE_ENV) or None
+
+
+def default_workspace_root() -> str:
+    """Where a :class:`Workspace` lives when nobody says otherwise.
+
+    ``REPRO_WORKSPACE`` wins; inside a checkout (cwd has ``.git``, or a
+    ``.repro-workspace`` already exists) the workspace stays local as
+    ``./.repro-workspace``; anywhere else it is the per-user ``~/.repro``.
+    """
+    env = env_workspace_root()
+    if env:
+        return env
+    local = os.path.join(os.getcwd(), ".repro-workspace")
+    if os.path.isdir(local) or os.path.isdir(os.path.join(os.getcwd(),
+                                                          ".git")):
+        return local
+    return os.path.join(os.path.expanduser("~"), ".repro")
+
+
+def _env_path(filename: str) -> str | None:
+    root = env_workspace_root()
+    return os.path.join(root, filename) if root else None
+
+
+def resolve_trace_store(explicit: str | None = None) -> str:
+    """Trace-store path: explicit > REPRO_WORKSPACE > legacy default."""
+    return explicit or _env_path(TRACE_FILENAME) or LEGACY_TRACE_STORE
+
+
+def resolve_sweep_store(explicit: str | None = None) -> str:
+    """Sweep-store path: explicit > REPRO_WORKSPACE > legacy default."""
+    return explicit or _env_path(SWEEP_FILENAME) or LEGACY_SWEEP_STORE
+
+
+def resolve_sweep_cache(explicit: str | None = None) -> str:
+    """Sweep analysis-cache dir: explicit > REPRO_WORKSPACE > legacy."""
+    return explicit or _env_path(SWEEP_CACHE_DIRNAME) or LEGACY_SWEEP_CACHE
+
+
+def resolve_tune_store(explicit: str | None = None) -> str:
+    """Tune-store path: explicit > REPRO_TUNE_STORE (deprecated) >
+    REPRO_WORKSPACE > legacy default."""
+    if explicit:
+        return explicit
+    legacy_env = os.environ.get("REPRO_TUNE_STORE")
+    if legacy_env:
+        warnings.warn(
+            "REPRO_TUNE_STORE is deprecated; set REPRO_WORKSPACE instead "
+            "(one root for the trace, sweep and tune stores)",
+            FutureWarning, stacklevel=2)
+        return legacy_env
+    return _env_path(TUNE_FILENAME) or LEGACY_TUNE_STORE
+
+
+def resolve_bench_dir(explicit: str | None = None) -> str:
+    """``benchmarks.run`` JSON output dir: explicit > workspace > legacy."""
+    return explicit or _env_path(BENCH_DIRNAME) or LEGACY_BENCH_DIR
+
+
+class Workspace:
+    """All persistent roofline state under one root directory.
+
+    The trace, sweep and tune stores are members (lazily constructed, so
+    this class is importable without jax), and one machine-provenance
+    header (:attr:`header_path`) binds them: which machine model the
+    numbers are against, which git SHA and host wrote them last.
+    """
+
+    def __init__(self, root: str | None = None):
+        self.root = os.path.abspath(root or default_workspace_root())
+        self._trace_store: "TraceStore | None" = None
+        self._sweep_store: "TraceStore | None" = None
+        self._tune_store: "TuneStore | None" = None
+
+    def __repr__(self) -> str:
+        return f"Workspace({self.root!r})"
+
+    # -- layout ----------------------------------------------------------
+    @property
+    def trace_path(self) -> str:
+        return os.path.join(self.root, TRACE_FILENAME)
+
+    @property
+    def sweep_path(self) -> str:
+        return os.path.join(self.root, SWEEP_FILENAME)
+
+    @property
+    def sweep_cache_dir(self) -> str:
+        return os.path.join(self.root, SWEEP_CACHE_DIRNAME)
+
+    @property
+    def tune_path(self) -> str:
+        return os.path.join(self.root, TUNE_FILENAME)
+
+    @property
+    def header_path(self) -> str:
+        return os.path.join(self.root, HEADER_FILENAME)
+
+    @property
+    def bench_dir(self) -> str:
+        return os.path.join(self.root, BENCH_DIRNAME)
+
+    def store_paths(self) -> dict[str, str]:
+        return {"trace": self.trace_path, "sweep": self.sweep_path,
+                "tune": self.tune_path}
+
+    # -- stores (lazy: importing them pulls in the subsystem modules) ----
+    @property
+    def trace_store(self) -> "TraceStore":
+        if self._trace_store is None:
+            from repro.trace.store import TraceStore
+            self._trace_store = TraceStore(self.trace_path)
+        return self._trace_store
+
+    @property
+    def sweep_store(self) -> "TraceStore":
+        """Sweep records share the trace schema; separate file, same class."""
+        if self._sweep_store is None:
+            from repro.trace.store import TraceStore
+            self._sweep_store = TraceStore(self.sweep_path)
+        return self._sweep_store
+
+    @property
+    def tune_store(self) -> "TuneStore":
+        if self._tune_store is None:
+            from repro.tune.store import TuneStore
+            self._tune_store = TuneStore(self.tune_path)
+        return self._tune_store
+
+    # -- provenance header ----------------------------------------------
+    def ensure(self) -> "Workspace":
+        os.makedirs(self.root, exist_ok=True)
+        return self
+
+    def write_header(self, machine: str) -> dict[str, Any]:
+        """Stamp (or refresh) the shared machine-provenance header.
+
+        ``created`` survives rewrites; ``updated``/``machine``/``git_sha``/
+        ``host`` track the latest writer.  Host fingerprinting needs jax
+        (backend identity); a jax-free process records what it can.
+        """
+        self.ensure()
+        prev = self.read_header()
+        from repro.trace.store import git_sha
+        try:
+            from repro.trace.store import host_fingerprint
+            host = host_fingerprint()
+        except Exception:                       # jax-free caller
+            import platform
+            host = {"host": platform.node(), "platform": platform.platform()}
+        header = {
+            "schema_version": HEADER_SCHEMA_VERSION,
+            "machine": machine,
+            "git_sha": git_sha(),
+            "host": host,
+            "created": prev.get("created", time.time()),
+            "updated": time.time(),
+            "stores": {k: os.path.basename(v)
+                       for k, v in self.store_paths().items()},
+        }
+        tmp = f"{self.header_path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(header, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.header_path)
+        return header
+
+    def read_header(self) -> dict[str, Any]:
+        """The stored header, or ``{}`` (corruption is never fatal —
+        same rule as every store in this repo)."""
+        try:
+            with open(self.header_path) as f:
+                doc = json.load(f)
+            return doc if isinstance(doc, dict) else {}
+        except (OSError, ValueError):
+            return {}
+
+    def describe(self) -> str:
+        header = self.read_header()
+        lines = [f"workspace: {self.root}"]
+        if header:
+            lines.append(
+                f"  header: machine={header.get('machine', '?')} "
+                f"git={str(header.get('git_sha', '?'))[:12]} "
+                f"host={header.get('host', {}).get('host', '?')}")
+        for kind, path in self.store_paths().items():
+            mark = "present" if os.path.exists(path) else "absent"
+            lines.append(f"  {kind:<6} {os.path.basename(path):<12} {mark}")
+        return "\n".join(lines)

@@ -1,6 +1,12 @@
+"""Deprecated entry point — ``python -m repro sweep {run,report}`` is
+the unified surface (same flags, same output, one workspace)."""
+
 import sys
 
 from repro.sweep.cli import main
 
 if __name__ == "__main__":
+    print("note: `python -m repro.sweep` is deprecated; use "
+          "`python -m repro sweep {run,report}` (same flags, "
+          "one REPRO_WORKSPACE root — see docs/CLI.md)", file=sys.stderr)
     sys.exit(main())

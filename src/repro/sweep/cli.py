@@ -30,7 +30,8 @@ import dataclasses
 import sys
 from typing import Sequence
 
-from repro.sweep.engine import DEFAULT_CACHE_DIR, DEFAULT_STORE
+from repro.session.workspace import (LEGACY_SWEEP_CACHE, LEGACY_SWEEP_STORE,
+                                     resolve_sweep_cache, resolve_sweep_store)
 from repro.sweep.spec import (SweepSpec, parse_int_list, parse_mesh,
                               smoke_spec)
 
@@ -84,6 +85,7 @@ def cmd_run(ap: argparse.ArgumentParser, args) -> int:
     from repro.sweep.engine import run_sweep
     from repro.trace.store import TraceStore
 
+    args.store = resolve_sweep_store(args.store)
     try:
         spec = spec_from_args(ap, args)
         points, skipped = spec.expand()
@@ -98,7 +100,8 @@ def cmd_run(ap: argparse.ArgumentParser, args) -> int:
           f"({len(skipped)} skipped) -> {args.store}")
     result = run_sweep(
         spec, store_path=args.store, workers=args.workers,
-        cache_dir=None if args.no_cache else args.cache_dir,
+        cache_dir=None if args.no_cache else resolve_sweep_cache(
+            args.cache_dir),
         progress=print)
     print(f"[{spec.name}] {result.n_ok} ok ({result.n_cached} cached), "
           f"{result.n_failed} failed, {len(result.skipped)} skipped")
@@ -121,6 +124,7 @@ def cmd_report(ap: argparse.ArgumentParser, args) -> int:
                                        render_summary, sweep_records)
     from repro.trace.store import TraceStore
 
+    args.store = resolve_sweep_store(args.store)
     store = TraceStore(args.store)
     recs = latest_per_point(sweep_records(store, args.name))
     if not recs:
@@ -141,9 +145,9 @@ def cmd_report(ap: argparse.ArgumentParser, args) -> int:
     return 0
 
 
-def main(argv: Sequence[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.sweep",
-                                 description=__doc__)
+def main(argv: Sequence[str] | None = None,
+         prog: str = "python -m repro.sweep") -> int:
+    ap = argparse.ArgumentParser(prog=prog, description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     run = sub.add_parser("run", help="expand a spec, run every point, "
@@ -189,15 +193,23 @@ def main(argv: Sequence[str] | None = None) -> int:
                           "analytical sweeps, 1 for measured — concurrent "
                           "wall-clock samples contend; 0 = inline, "
                           "single-device points only)")
-    run.add_argument("--store", default=DEFAULT_STORE)
-    run.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR,
-                     help="per-point analysis cache (analytical runs)")
+    run.add_argument("--store", default=None,
+                     help="JSONL store path (default: "
+                          "$REPRO_WORKSPACE/sweep.jsonl, else "
+                          f"{LEGACY_SWEEP_STORE})")
+    run.add_argument("--cache-dir", default=None,
+                     help="per-point analysis cache (analytical runs; "
+                          "default: $REPRO_WORKSPACE/sweep_cache, else "
+                          f"{LEGACY_SWEEP_CACHE})")
     run.add_argument("--no-cache", action="store_true")
     run.set_defaults(fn=cmd_run, parser=run)
 
     rep = sub.add_parser("report", help="render the stored campaign: ranked "
                                         "table + roofline gallery")
-    rep.add_argument("--store", default=DEFAULT_STORE)
+    rep.add_argument("--store", default=None,
+                     help="JSONL store path (default: "
+                          "$REPRO_WORKSPACE/sweep.jsonl, else "
+                          f"{LEGACY_SWEEP_STORE})")
     rep.add_argument("--name", default=None,
                      help="campaign name (default: every sweep record)")
     rep.add_argument("--charts", type=int, default=0,

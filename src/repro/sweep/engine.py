@@ -34,10 +34,15 @@ import traceback
 from concurrent.futures import ProcessPoolExecutor
 from typing import Any, Callable, Mapping
 
+from repro.session.workspace import (LEGACY_SWEEP_CACHE, LEGACY_SWEEP_STORE,
+                                     resolve_sweep_cache,
+                                     resolve_sweep_store)
 from repro.sweep.spec import SweepPoint, SweepSpec, points_by_devices
 
-DEFAULT_STORE = "benchmarks/results/sweep.jsonl"
-DEFAULT_CACHE_DIR = "benchmarks/results/sweep_cache"
+# legacy constants (pre-workspace callers import them); the engine itself
+# resolves through repro.session.workspace so REPRO_WORKSPACE governs it
+DEFAULT_STORE = LEGACY_SWEEP_STORE
+DEFAULT_CACHE_DIR = LEGACY_SWEEP_CACHE
 
 
 @dataclasses.dataclass
@@ -292,11 +297,16 @@ def _append_outcome(store, point: SweepPoint, outcome: dict) -> PointResult:
                        cached=bool(outcome.get("cached")), wall_s=wall)
 
 
-def run_sweep(sweep: SweepSpec, *, store_path: str = DEFAULT_STORE,
+def run_sweep(sweep: SweepSpec, *, store_path: str | None = None,
               workers: int | None = None,
-              cache_dir: str | None = DEFAULT_CACHE_DIR,
+              cache_dir: "str | None | type(Ellipsis)" = ...,
               progress: Callable[[str], None] | None = None) -> SweepResult:
     """Run a whole campaign: expand, execute, persist one record per point.
+
+    ``store_path=None`` resolves through the workspace rules
+    (``$REPRO_WORKSPACE/sweep.jsonl``, else the legacy default); the
+    ``cache_dir`` default resolves the same way (``None`` means *no*
+    cache, so the sentinel is ``...``) — one root for both.
 
     ``workers``: pool size; ``0`` runs every point inline in this process
     (single-device points only — useful under pytest and for debugging).
@@ -306,6 +316,9 @@ def run_sweep(sweep: SweepSpec, *, store_path: str = DEFAULT_STORE,
     """
     from repro.trace.store import TraceStore
 
+    store_path = resolve_sweep_store(store_path)
+    if cache_dir is ...:
+        cache_dir = resolve_sweep_cache(None)
     say = progress or (lambda s: None)
     points, skipped = sweep.expand()
     for p, reason in skipped:

@@ -1,6 +1,12 @@
+"""Deprecated entry point — ``python -m repro {record,compare,report}``
+is the unified surface (same flags, same output, one workspace)."""
+
 import sys
 
 from repro.trace.cli import main
 
 if __name__ == "__main__":
+    print("note: `python -m repro.trace` is deprecated; use "
+          "`python -m repro {record,compare,report}` (same flags, "
+          "one REPRO_WORKSPACE root — see docs/CLI.md)", file=sys.stderr)
     sys.exit(main())

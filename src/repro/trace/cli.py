@@ -35,13 +35,16 @@ import jax.numpy as jnp
 from repro.configs.base import RunConfig, ShapeSpec
 from repro.configs.registry import ALL, ARCHS, get_config, get_smoke
 from repro.core.machine import MACHINES
+from repro.session.workspace import LEGACY_TRACE_STORE, resolve_trace_store
 from repro.trace.collector import PhaseMeasurement, collect_phases
 from repro.trace.compare import (compare_last, compare_records, format_deltas,
                                  has_regressions)
 from repro.trace.store import TraceStore, record_from_phases
 from repro.trace.timeline import ascii_timeline, build_timeline, timeline_from_record
 
-DEFAULT_STORE = "benchmarks/results/trace.jsonl"
+# legacy constant (pre-workspace callers import it); the CLI itself
+# resolves through repro.session.workspace so REPRO_WORKSPACE governs it
+DEFAULT_STORE = LEGACY_TRACE_STORE
 
 
 # --------------------------------------------------------------------------
@@ -118,6 +121,7 @@ def scale_measurement(m: PhaseMeasurement, factor: float) -> PhaseMeasurement:
 
 def cmd_record(args) -> int:
     from repro.core.report import achieved_table
+    args.store = resolve_trace_store(args.store)
     store = TraceStore(args.store)
     configs = list(ARCHS) if args.all else (args.config or [])
     if not configs:
@@ -168,6 +172,7 @@ def cmd_record(args) -> int:
 # --------------------------------------------------------------------------
 
 def cmd_compare(args) -> int:
+    args.store = resolve_trace_store(args.store)
     store = TraceStore(args.store)
     if args.base or args.new:
         if not (args.base and args.new):
@@ -191,6 +196,7 @@ def cmd_compare(args) -> int:
 
 def cmd_report(args) -> int:
     from repro.core.report import achieved_table
+    args.store = resolve_trace_store(args.store)
     store = TraceStore(args.store)
     configs = args.config or store.configs()
     if not configs:
@@ -218,15 +224,15 @@ def cmd_report(args) -> int:
 # --------------------------------------------------------------------------
 
 def _add_store(p) -> None:
-    p.add_argument("--store", default=DEFAULT_STORE,
-                   help=f"JSONL store path (default {DEFAULT_STORE})")
+    p.add_argument("--store", default=None,
+                   help="JSONL store path (default: "
+                        f"$REPRO_WORKSPACE/trace.jsonl, else "
+                        f"{LEGACY_TRACE_STORE})")
 
 
-def main(argv: Sequence[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.trace",
-                                 description=__doc__)
-    sub = ap.add_subparsers(dest="cmd", required=True)
-
+def add_record_parser(sub):
+    """``record`` subcommand — shared by ``python -m repro.trace`` and
+    the unified ``python -m repro`` CLI (same flags, same cmd)."""
     rec = sub.add_parser("record", help="measure configs, append records")
     rec.add_argument("--config", action="append", choices=list(ALL),
                      help="config name (repeatable)")
@@ -252,7 +258,10 @@ def main(argv: Sequence[str] | None = None) -> int:
                      help="multiply measured wall times before storing "
                           "(regression drills / tests)")
     rec.set_defaults(fn=cmd_record)
+    return rec
 
+
+def add_compare_parser(sub):
     cmp_ = sub.add_parser("compare", help="diff runs, flag regressions")
     cmp_.add_argument("--config", action="append",
                       help="restrict to config(s); default: every config "
@@ -267,12 +276,24 @@ def main(argv: Sequence[str] | None = None) -> int:
     cmp_.add_argument("--all-cells", action="store_true",
                       help="print every cell, not only flagged ones")
     cmp_.set_defaults(fn=cmd_compare)
+    return cmp_
 
+
+def add_report_parser(sub):
     rep = sub.add_parser("report", help="render the newest stored records")
     rep.add_argument("--config", action="append")
     _add_store(rep)
     rep.set_defaults(fn=cmd_report)
+    return rep
 
+
+def main(argv: Sequence[str] | None = None,
+         prog: str = "python -m repro.trace") -> int:
+    ap = argparse.ArgumentParser(prog=prog, description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    add_record_parser(sub)
+    add_compare_parser(sub)
+    add_report_parser(sub)
     args = ap.parse_args(argv)
     return args.fn(args)
 

@@ -1,5 +1,12 @@
+"""Deprecated entry point — ``python -m repro tune {search,show,apply}``
+is the unified surface (same flags, same output, one workspace)."""
+
 import sys
 
 from repro.tune.cli import main
 
-sys.exit(main())
+if __name__ == "__main__":
+    print("note: `python -m repro.tune` is deprecated; use "
+          "`python -m repro tune {search,show,apply}` (same flags, "
+          "one REPRO_WORKSPACE root — see docs/CLI.md)", file=sys.stderr)
+    sys.exit(main())

@@ -145,15 +145,17 @@ def cmd_apply(args) -> int:
     return 1 if stale else 0
 
 
-def main(argv: Sequence[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(prog="python -m repro.tune",
-                                 description=__doc__)
+def main(argv: Sequence[str] | None = None,
+         prog: str = "python -m repro.tune") -> int:
+    ap = argparse.ArgumentParser(prog=prog, description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     def _common(p) -> None:
         p.add_argument("--store", default=default_store_path(),
                        help="tune store path (default "
-                            f"{default_store_path()}; env REPRO_TUNE_STORE)")
+                            f"{default_store_path()}; env REPRO_WORKSPACE "
+                            "governs it, REPRO_TUNE_STORE is a deprecated "
+                            "override)")
         p.add_argument("--kernel", action="append",
                        choices=list(sp.PALLAS_KERNELS),
                        help="kernel name (repeatable; default: all)")

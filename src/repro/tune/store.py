@@ -27,11 +27,15 @@ from repro.kernels.config import KernelConfig, default_config
 
 SCHEMA_VERSION = 1
 DEFAULT_STORE = "benchmarks/results/tune.json"
-STORE_ENV = "REPRO_TUNE_STORE"
+STORE_ENV = "REPRO_TUNE_STORE"          # deprecated: REPRO_WORKSPACE wins
 
 
 def default_store_path() -> str:
-    return os.environ.get(STORE_ENV) or DEFAULT_STORE
+    """Store path when nobody passes one: ``REPRO_TUNE_STORE`` (kept as a
+    deprecated override), else ``$REPRO_WORKSPACE/tune.json``, else the
+    legacy default — one resolution rule for all three stores."""
+    from repro.session.workspace import resolve_tune_store
+    return resolve_tune_store()
 
 
 def shape_key(shape: Sequence[int]) -> str:

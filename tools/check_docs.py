@@ -9,7 +9,11 @@ Scans README.md and docs/*.md for
   ``benchmarks/results/*`` are exempt);
 * ``python -m <module>`` invocations — each distinct module must answer
   ``--help`` with exit status 0 (run with ``PYTHONPATH=src`` from the
-  repo root).
+  repo root);
+* ``python -m repro <subcommand>`` invocations (the unified CLI) — each
+  distinct subcommand must answer ``--help`` with exit status 0 too, so
+  a renamed/removed subcommand fails the build instead of rotting in
+  the docs.
 
 Exit status 0 = consistent; 1 = stale references (each printed).  Run by
 CI so a renamed module or deleted file fails the build instead of rotting
@@ -32,6 +36,9 @@ DEFAULT_DOCS = ("README.md", "docs")
 _PATH_RE = re.compile(
     r"\b((?:src|benchmarks|docs|examples|tools|tests)/[\w./\-]*\w)")
 _MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z_]\w*(?:\.\w+)*)")
+# `python -m repro <sub>` — the unified CLI's subcommands (a bare word
+# after the module, so `python -m repro.trace` does not match)
+_REPRO_SUB_RE = re.compile(r"python\s+-m\s+repro\s+([a-z][a-z-]*)")
 
 # paths created at run time, legitimately quoted before they exist
 _GENERATED = ("benchmarks/results/",)
@@ -76,19 +83,47 @@ def quoted_modules(docs: dict[str, str]) -> dict[str, str]:
     return out
 
 
-def check_modules(modules: dict[str, str]) -> list[str]:
-    problems = []
+def quoted_repro_subcommands(docs: dict[str, str]) -> dict[str, str]:
+    """{unified-CLI subcommand: first 'doc:line' that quotes it}."""
+    out: dict[str, str] = {}
+    for doc, text in docs.items():
+        for ln, line in enumerate(text.splitlines(), 1):
+            for m in _REPRO_SUB_RE.finditer(line):
+                out.setdefault(
+                    m.group(1),
+                    f"{os.path.relpath(doc, REPO_ROOT)}:{ln}")
+    return out
+
+
+def _run_help(argv: list[str]) -> "subprocess.CompletedProcess[str]":
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        argv + ["--help"], cwd=REPO_ROOT, env=env,
+        capture_output=True, text=True, timeout=120)
+
+
+def check_modules(modules: dict[str, str]) -> list[str]:
+    problems = []
     for mod, where in sorted(modules.items()):
-        proc = subprocess.run(
-            [sys.executable, "-m", mod, "--help"], cwd=REPO_ROOT, env=env,
-            capture_output=True, text=True, timeout=120)
+        proc = _run_help([sys.executable, "-m", mod])
         if proc.returncode != 0:
             tail = (proc.stderr or proc.stdout).strip().splitlines()[-1:]
             problems.append(
                 f"{where}: `python -m {mod} --help` exited "
+                f"{proc.returncode} ({' '.join(tail)})")
+    return problems
+
+
+def check_repro_subcommands(subs: dict[str, str]) -> list[str]:
+    problems = []
+    for sub, where in sorted(subs.items()):
+        proc = _run_help([sys.executable, "-m", "repro", sub])
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-1:]
+            problems.append(
+                f"{where}: `python -m repro {sub} --help` exited "
                 f"{proc.returncode} ({' '.join(tail)})")
     return problems
 
@@ -103,6 +138,7 @@ def main(argv: list[str] | None = None) -> int:
     for doc, text in docs.items():
         problems.extend(check_paths(doc, text))
     problems.extend(check_modules(quoted_modules(docs)))
+    problems.extend(check_repro_subcommands(quoted_repro_subcommands(docs)))
     if problems:
         print(f"check_docs: {len(problems)} stale reference(s):",
               file=sys.stderr)
@@ -110,7 +146,9 @@ def main(argv: list[str] | None = None) -> int:
             print(f"  {p}", file=sys.stderr)
         return 1
     n_mod = len(quoted_modules(docs))
-    print(f"check_docs: OK ({len(docs)} doc(s), {n_mod} CLI module(s))")
+    n_sub = len(quoted_repro_subcommands(docs))
+    print(f"check_docs: OK ({len(docs)} doc(s), {n_mod} CLI module(s), "
+          f"{n_sub} `python -m repro` subcommand(s))")
     return 0
 
 
