@@ -6,7 +6,14 @@ analysis names batch as the lever — this study quantifies it: lower the
 glm4-9b serve_step at growing global batch and watch the weight-read
 amortize (compute and cache traffic scale with B, weight traffic doesn't).
 
-``PYTHONPATH=src python -m benchmarks.decode_batch_study``
+Registered as a ``benchmarks.run`` suite, so the per-batch rows land in
+``BENCH_<ts>.json`` and become a ``repro.obs.trend`` series (the
+bound-limited tok/s per batch is a pure function of the analytical model
+— any drift is a modeling change, which is exactly what a trend gate
+should catch).  The row's ``us_per_call`` column carries the perfect-
+overlap bound per decode step.
+
+``PYTHONPATH=src python -m benchmarks.decode_batch_study [--smoke]``
 """
 
 from __future__ import annotations
@@ -15,43 +22,75 @@ import json
 import os
 import sys
 
+from benchmarks.common import Row
+
 RESULTS = os.path.join(os.path.dirname(__file__), "results",
                        "decode_batch_study.jsonl")
 
 BATCHES = (32, 128, 512, 2048)
+SMOKE_BATCHES = (32, 128)
 ARCH = "glm4-9b"
 
 
-def main(argv=None) -> int:
+def study_rows(batches=BATCHES, arch: str = ARCH,
+               results_path: str | None = RESULTS) -> list[Row]:
+    """One row per global batch + the amortization summary row."""
     from repro.configs import base as B
     from repro.launch import dryrun
 
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    rows = []
-    with open(RESULTS, "w") as out:
-        for gb in BATCHES:
+    out = None
+    if results_path:
+        os.makedirs(os.path.dirname(results_path), exist_ok=True)
+        out = open(results_path, "w")
+    rows: list[Row] = []
+    recs = []
+    try:
+        for gb in batches:
             # install a custom decode shape for this batch size
             name = f"decode_32k_b{gb}"
             B.SHAPES[name] = B.ShapeSpec(name, 32_768, gb, "decode")
-            rec = dryrun.run_cell(ARCH, name, "single")
+            rec = dryrun.run_cell(arch, name, "single")
             rec["global_batch"] = gb
-            out.write(json.dumps(rec) + "\n")
+            if out:
+                out.write(json.dumps(rec) + "\n")
+            recs.append((gb, rec))
             tokens_per_bound = gb / max(rec["bound_overlap_s"], 1e-12)
-            rows.append((gb, rec))
-            print(f"[B={gb:5d}] compute {rec['compute_s']*1e3:8.2f}ms "
-                  f"memory {rec['memory_s']*1e3:8.2f}ms "
-                  f"frac {rec['roofline_fraction']:.4f} "
-                  f"peak {rec['peak_device_bytes']/2**30:5.1f}GiB "
-                  f"fits={rec['fits_hbm']} "
-                  f"| bound-limited {tokens_per_bound:,.0f} tok/s/pod")
+            rows.append((
+                f"decode_batch/{arch}_b{gb}",
+                rec["bound_overlap_s"] * 1e6,
+                f"frac={rec['roofline_fraction']:.4f};"
+                f"tok_s={tokens_per_bound:,.0f};"
+                f"peak_gib={rec['peak_device_bytes'] / 2**30:.1f};"
+                f"fits={rec['fits_hbm']}"))
+    finally:
+        if out:
+            out.close()
     # amortization check: tokens/s at the roofline bound must grow
     # sublinearly-but-strongly with batch until the cache dominates
-    t0 = BATCHES[0] / rows[0][1]["bound_overlap_s"]
-    t3 = BATCHES[-1] / rows[-1][1]["bound_overlap_s"]
-    print(f"bound-limited throughput {t0:,.0f} → {t3:,.0f} tok/s/pod "
-          f"({t3/t0:.1f}× from {BATCHES[-1]//BATCHES[0]}× batch)")
-    return 0
+    t0 = batches[0] / recs[0][1]["bound_overlap_s"]
+    t3 = batches[-1] / recs[-1][1]["bound_overlap_s"]
+    rows.append((f"decode_batch/{arch}_amortization", 0.0,
+                 f"tok_s={t0:,.0f}->{t3:,.0f};"
+                 f"gain={t3 / t0:.1f}x;"
+                 f"batch_gain={batches[-1] // batches[0]}x"))
+    return rows
+
+
+def main(smoke: bool = False) -> list[Row]:
+    return study_rows(SMOKE_BATCHES if smoke else BATCHES)
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser(
+        description="decode batch-scaling study: bound-limited tok/s vs "
+                    "global batch (analytical dry-run)")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"small batch grid {SMOKE_BATCHES} "
+                         "(CI preset) instead of the full "
+                         f"{BATCHES}")
+    a = ap.parse_args()
+    emit(main(smoke=a.smoke))
+    sys.exit(0)

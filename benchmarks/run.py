@@ -36,6 +36,8 @@ SUITES = (
     "tune_smoke",        # repro.tune: search→store→hit loop
     "fused_bench",       # repro.kernels.fused: census gate + before/after
     "session_smoke",     # repro.session: whole workflow, one workspace root
+    "decode_batch_study",  # beyond-paper: decode tok/s vs global batch
+    "obs_smoke",         # repro.obs: merge→trend→advise fleet loop
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -50,13 +52,22 @@ def default_json_dir() -> str:
 
 
 def write_json(json_dir: str, results: dict[str, dict]) -> str:
-    """Persist one run's rows: ``BENCH_<utc timestamp>.json``."""
+    """Persist one run's rows: ``BENCH_<utc timestamp>.json``.
+
+    Stamped with the same provenance as a trace record — git SHA + host
+    fingerprint — so ``repro.obs.trend`` series key correctly across a
+    fleet's machines (the trace store always had these; the harvest
+    files now do too).
+    """
+    from repro.trace.store import git_sha, host_fingerprint
     os.makedirs(json_dir, exist_ok=True)
     stamp = time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
     path = os.path.join(json_dir, f"BENCH_{stamp}.json")
     doc = {
         "schema_version": 1,
         "timestamp": time.time(),
+        "git_sha": git_sha(),
+        "host": host_fingerprint(),
         "suites": {
             name: {
                 "ok": r["ok"],

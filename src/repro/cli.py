@@ -17,7 +17,13 @@ root (``--workspace`` / ``REPRO_WORKSPACE``; default
 * ``sweep``        — cross-config campaigns (``run`` / ``report``),
   forwarded to ``repro.sweep`` with the workspace store;
 * ``tune``         — kernel autotuning (``search`` / ``show`` /
-  ``apply``), forwarded to ``repro.tune`` with the workspace store.
+  ``apply``), forwarded to ``repro.tune`` with the workspace store;
+* ``trend``        — perf-trend sparklines over stored records +
+  harvested ``BENCH_*.json`` (``--gate`` exits non-zero on regression);
+* ``advise``       — mine stored records for known bottleneck patterns,
+  ranked evidence-cited remediations;
+* ``merge``        — union a remote workspace's stores into this one
+  (fleet view; dedupe + skip-and-report conflicts).
 
 The old ``python -m repro.trace`` / ``repro.sweep`` / ``repro.tune``
 entry points still work (same flags, same output) but are deprecated
@@ -32,6 +38,9 @@ Examples::
     PYTHONPATH=src python -m repro compare --config minitron-4b
     PYTHONPATH=src python -m repro sweep run --smoke
     PYTHONPATH=src python -m repro tune search --smoke
+    PYTHONPATH=src python -m repro trend --gate
+    PYTHONPATH=src python -m repro advise
+    PYTHONPATH=src python -m repro merge /mnt/fleet/hostB/.repro-workspace
 """
 
 from __future__ import annotations
@@ -48,7 +57,7 @@ PROG = "python -m repro"
 
 #: workflow order — also the order the subcommands are registered in
 SUBCOMMANDS = ("characterize", "profile", "record", "report", "compare",
-               "sweep", "tune")
+               "sweep", "tune", "trend", "advise", "merge")
 
 
 @contextlib.contextmanager
@@ -103,6 +112,35 @@ def cmd_profile(args) -> int:
         print(f"profile: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2
     print(res.render(charts=args.charts, top_kernels=args.top))
+    return res.exit_code
+
+
+def cmd_trend(args) -> int:
+    s = _session(args)
+    res = s.trend(config=args.config, gate=args.gate,
+                  tolerance=args.tolerance, max_rows=args.max_rows,
+                  bench_dirs=args.bench_dir or None)
+    print(res.render())
+    return res.exit_code
+
+
+def cmd_advise(args) -> int:
+    s = _session(args)
+    res = s.advise(config=args.config, top=args.top)
+    print(res.render())
+    return res.exit_code
+
+
+def cmd_merge(args) -> int:
+    s = _session(args)
+    try:
+        res = s.merge(args.remote)
+    except FileNotFoundError as e:
+        # missing remote root: message + exit 2, same convention as the
+        # other subcommands' user errors
+        print(f"merge: {e}", file=sys.stderr)
+        return 2
+    print(res.render())
     return res.exit_code
 
 
@@ -243,6 +281,53 @@ def build_parser() -> argparse.ArgumentParser:
     # surface; the legacy `python -m repro.trace` flags stay unchanged
     for p in (rec, rep, cmp_):
         _add_workspace(p)
+
+    tr = sub.add_parser("trend",
+                        help="perf-trend sparklines over stored records "
+                             "+ BENCH_*.json; --gate = CI regression "
+                             "gate (repro.obs)")
+    _add_workspace(tr)
+    tr.add_argument("--config", default=None,
+                    help="restrict trace series to one registry config")
+    tr.add_argument("--machine", default="cpu-host",
+                    choices=sorted(MACHINES),
+                    help="machine model stamped into the result")
+    tr.add_argument("--gate", action="store_true",
+                    help="exit 1 when any lower-is-better series "
+                         "regressed past --tolerance vs its history")
+    tr.add_argument("--tolerance", type=float, default=None,
+                    help="relative regression tolerance (default 0.25)")
+    tr.add_argument("--max-rows", type=int, default=40,
+                    help="series rows to print (default 40)")
+    tr.add_argument("--bench-dir", action="append", metavar="DIR",
+                    help="extra BENCH_*.json dir(s) instead of the "
+                         "workspace bench/ default (repeatable)")
+    tr.set_defaults(fn=cmd_trend)
+
+    ad = sub.add_parser("advise",
+                        help="mine stored records for bottleneck "
+                             "patterns; ranked remediations (repro.obs)")
+    _add_workspace(ad)
+    ad.add_argument("--config", default=None,
+                    help="restrict to one registry config")
+    ad.add_argument("--machine", default="cpu-host",
+                    choices=sorted(MACHINES),
+                    help="machine key the tune-store rules check "
+                         "(default cpu-host)")
+    ad.add_argument("--top", type=int, default=0,
+                    help="print only the top N findings (default: all)")
+    ad.set_defaults(fn=cmd_advise)
+
+    mg = sub.add_parser("merge",
+                        help="union a remote workspace's stores into "
+                             "this one (fleet view, repro.obs)")
+    _add_workspace(mg)
+    mg.add_argument("remote", metavar="REMOTE_ROOT",
+                    help="root directory of the workspace to merge in")
+    mg.add_argument("--machine", default="cpu-host",
+                    choices=sorted(MACHINES),
+                    help="machine model stamped into the result")
+    mg.set_defaults(fn=cmd_merge)
 
     # stubs so the top-level --help lists them; actual dispatch happens in
     # main()'s forwarding fast path, never through these parsers

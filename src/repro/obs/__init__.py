@@ -1,0 +1,50 @@
+"""repro.obs — fleet observability over the workspace stores.
+
+Three capabilities, all store-only (nothing re-lowers or re-times):
+
+* :func:`merge_workspace` — machine-keyed union of a remote workspace's
+  trace/sweep/tune stores (+ bench harvests) into the local one, with
+  skip-and-report conflict handling and provenance in ``workspace.json``;
+* :func:`collect_series` / :func:`gate_series` — perf-trend series over
+  stored trace records and harvested ``BENCH_*.json`` files, with an
+  ASCII sparkline report and a CI regression gate;
+* :func:`advise` — a rule engine mining stored trace payloads for known
+  bottleneck patterns (launch overhead, scatter-heavy backward, tune
+  mismatches, bandwidth-pinned levels), emitting ranked, evidence-cited
+  remediations — the DeepProf direction pointed at our own stores.
+
+``python -m repro {merge,trend,advise}`` (``repro.cli``) and
+``Session.merge/trend/advise`` are this package as a CLI/API.
+
+Lazy (PEP 562) like ``repro.session``: importing ``repro.obs`` pulls in
+no jax and no store classes.
+"""
+
+from typing import Any
+
+_LAZY = {
+    "Finding": "repro.obs.advisor",
+    "RULES": "repro.obs.advisor",
+    "advise": "repro.obs.advisor",
+    "render_findings": "repro.obs.advisor",
+    "MergeReport": "repro.obs.merge",
+    "merge_workspace": "repro.obs.merge",
+    "render_merge": "repro.obs.merge",
+    "Regression": "repro.obs.trend",
+    "TrendSeries": "repro.obs.trend",
+    "collect_series": "repro.obs.trend",
+    "gate_series": "repro.obs.trend",
+    "render_trend": "repro.obs.trend",
+    "sparkline": "repro.obs.trend",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str) -> Any:
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

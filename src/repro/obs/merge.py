@@ -1,0 +1,276 @@
+"""Fleet workspace merge: union a remote workspace's stores into local.
+
+A production fleet runs the same characterization on many hosts, each
+writing its own workspace (PR 5).  ``merge_workspace`` folds a remote
+root's ``trace.jsonl`` / ``sweep.jsonl`` / ``tune.json`` (plus harvested
+``bench/BENCH_*.json``) into the local workspace so one root can hold
+the whole fleet's history — the report/trend/advise side then groups by
+the machine + host keys every record already carries.
+
+Merge identity per store:
+
+* trace / sweep (JSONL): ``run_id`` — every record stamped one at write
+  time (uuid); records with no run_id fall back to a content hash.
+* tune (JSON): the store key ``kernel|backend|shape|dtype|machine`` —
+  the machine key means two hosts' winners coexist; a same-key conflict
+  resolves to the newer ``timestamp`` (and is reported).
+* bench: the ``BENCH_<utc timestamp>.json`` file name.
+
+The local store is never corrupted: remote corrupt lines, records from a
+*newer* schema, and same-id-different-content conflicts are skipped and
+counted in the returned :class:`MergeReport` (same never-fatal rule as
+the stores themselves).  Merging is idempotent — a second merge of the
+same remote adds nothing — and commutative up to conflict resolution.
+
+This module imports no jax and no store classes at module scope (the
+workspace import-light rule); stores load lazily inside the functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import hashlib
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+
+@dataclasses.dataclass
+class MergeReport:
+    """What one store's merge did (counts + human-readable notes)."""
+
+    store: str                    # "trace" | "sweep" | "tune" | "bench"
+    n_added: int = 0
+    n_dup: int = 0                # identical record already present
+    n_conflict: int = 0           # same identity, different content
+    n_skipped: int = 0            # corrupt / newer-schema remote records
+    notes: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def merged_any(self) -> bool:
+        return self.n_added > 0
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+    def describe(self) -> str:
+        head = (f"{self.store:<6} +{self.n_added} added, {self.n_dup} "
+                f"duplicate(s), {self.n_conflict} conflict(s), "
+                f"{self.n_skipped} skipped")
+        return "\n".join([head] + [f"    {n}" for n in self.notes])
+
+
+def _record_identity(d: dict[str, Any]) -> str:
+    """run_id when stamped, else a stable content hash (hand-rolled or
+    pre-run_id records still dedupe)."""
+    rid = d.get("run_id")
+    if rid:
+        return str(rid)
+    blob = json.dumps(d, sort_keys=True).encode()
+    return "sha1:" + hashlib.sha1(blob).hexdigest()[:16]
+
+
+def merge_jsonl(local_path: str, remote_path: str,
+                store: str = "trace") -> MergeReport:
+    """Union remote JSONL trace records into the local file by run_id.
+
+    Only lines that parse, carry a known schema, and are not already
+    present locally are appended; everything else is counted and noted.
+    Appends raw remote lines verbatim (provenance bytes preserved).
+    """
+    from repro.trace.store import SCHEMA_VERSION
+
+    rep = MergeReport(store=store)
+    if not os.path.exists(remote_path):
+        rep.note(f"remote has no {os.path.basename(remote_path)} — nothing "
+                 "to merge")
+        return rep
+
+    local: dict[str, dict] = {}
+    if os.path.exists(local_path):
+        with open(local_path) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError:
+                    continue                 # local corruption isn't ours
+                local[_record_identity(d)] = d
+
+    additions: list[str] = []
+    with open(remote_path) as f:
+        for i, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                rep.n_skipped += 1
+                rep.note(f"{remote_path}:{i}: corrupt line skipped")
+                continue
+            if not isinstance(d, dict):
+                rep.n_skipped += 1
+                rep.note(f"{remote_path}:{i}: non-record line skipped")
+                continue
+            if d.get("schema_version", 0) > SCHEMA_VERSION:
+                rep.n_skipped += 1
+                rep.note(f"{remote_path}:{i}: schema "
+                         f"{d.get('schema_version')} > {SCHEMA_VERSION} "
+                         "(newer writer) — skipped")
+                continue
+            ident = _record_identity(d)
+            if ident in local:
+                if local[ident] == d:
+                    rep.n_dup += 1
+                else:
+                    rep.n_conflict += 1
+                    rep.note(f"{remote_path}:{i}: run {ident} differs from "
+                             "the local record — local kept")
+                continue
+            local[ident] = d
+            additions.append(line.rstrip("\n"))
+
+    if additions:
+        os.makedirs(os.path.dirname(os.path.abspath(local_path)),
+                    exist_ok=True)
+        with open(local_path, "a") as f:
+            for line in additions:
+                f.write(line + "\n")
+        rep.n_added = len(additions)
+    return rep
+
+
+def merge_tune(local_path: str, remote_path: str) -> MergeReport:
+    """Union a remote tune store's winners into the local one by store
+    key; same-key conflicts resolve to the newer ``timestamp``."""
+    from repro.tune.store import SCHEMA_VERSION, TuneStore
+
+    rep = MergeReport(store="tune")
+    if not os.path.exists(remote_path):
+        rep.note("remote has no tune.json — nothing to merge")
+        return rep
+    try:
+        with open(remote_path) as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict):
+            raise ValueError("not a JSON object")
+    except (OSError, ValueError) as e:
+        rep.n_skipped += 1
+        rep.note(f"{remote_path}: corrupt remote tune store skipped ({e})")
+        return rep
+    if doc.get("schema_version", 0) > SCHEMA_VERSION:
+        rep.n_skipped += 1
+        rep.note(f"{remote_path}: schema {doc.get('schema_version')} > "
+                 f"{SCHEMA_VERSION} (newer writer) — skipped")
+        return rep
+    remote = doc.get("records")
+    if not isinstance(remote, dict):
+        rep.note("remote tune store holds no records")
+        return rep
+
+    store = TuneStore(local_path)
+    local = dict(store._load())
+    additions: dict[str, dict] = {}
+    for key, d in sorted(remote.items()):
+        if not isinstance(d, dict):
+            rep.n_skipped += 1
+            rep.note(f"tune key {key!r}: non-record value skipped")
+            continue
+        if d.get("schema_version", 0) > SCHEMA_VERSION:
+            rep.n_skipped += 1
+            rep.note(f"tune key {key!r}: newer-schema record skipped")
+            continue
+        mine = local.get(key)
+        if mine is None:
+            additions[key] = d
+        elif mine == d:
+            rep.n_dup += 1
+        else:
+            rep.n_conflict += 1
+            if float(d.get("timestamp", 0)) > float(
+                    mine.get("timestamp", 0)):
+                additions[key] = d
+                rep.note(f"tune key {key!r}: remote winner is newer — "
+                         "replaced local")
+            else:
+                rep.note(f"tune key {key!r}: local winner is newer — kept")
+    if additions:
+        store.put_many(additions)
+        rep.n_added = len(additions)
+    return rep
+
+
+def merge_bench(local_dir: str, remote_dir: str) -> MergeReport:
+    """Copy remote ``BENCH_*.json`` harvest files absent locally (the
+    file name is the identity: one per run per host timestamp)."""
+    rep = MergeReport(store="bench")
+    if not os.path.isdir(remote_dir):
+        rep.note("remote has no bench/ dir — nothing to merge")
+        return rep
+    for src in sorted(glob.glob(os.path.join(remote_dir, "BENCH_*.json"))):
+        dst = os.path.join(local_dir, os.path.basename(src))
+        if os.path.exists(dst):
+            rep.n_dup += 1
+            continue
+        try:                                # corrupt harvest ≠ fatal merge
+            with open(src) as f:
+                json.load(f)
+        except (OSError, ValueError):
+            rep.n_skipped += 1
+            rep.note(f"{src}: corrupt harvest file skipped")
+            continue
+        os.makedirs(local_dir, exist_ok=True)
+        shutil.copyfile(src, dst)
+        rep.n_added += 1
+    return rep
+
+
+def merge_workspace(local: Any, remote_root: str) -> list[MergeReport]:
+    """Merge every store of the workspace at ``remote_root`` into the
+    local :class:`~repro.session.workspace.Workspace`.
+
+    Returns one :class:`MergeReport` per store.  When anything was
+    actually added, a provenance entry (remote root + remote header
+    identity + per-store counts) is appended to the local
+    ``workspace.json`` — a no-op merge leaves the header untouched,
+    which is what makes a re-merge idempotent end to end.
+    """
+    from repro.session.workspace import Workspace
+
+    remote = Workspace(remote_root)
+    if not os.path.isdir(remote.root):
+        raise FileNotFoundError(
+            f"remote workspace root {remote.root!r} does not exist")
+    reports = [
+        merge_jsonl(local.trace_path, remote.trace_path, store="trace"),
+        merge_jsonl(local.sweep_path, remote.sweep_path, store="sweep"),
+        merge_tune(local.tune_path, remote.tune_path),
+        merge_bench(local.bench_dir, remote.bench_dir),
+    ]
+    if any(r.merged_any for r in reports):
+        rh = remote.read_header()
+        local.record_merge({
+            "remote_root": remote.root,
+            "remote_machine": rh.get("machine"),
+            "remote_host": rh.get("host", {}).get("host"),
+            "remote_git_sha": rh.get("git_sha"),
+            "added": {r.store: r.n_added for r in reports},
+            "conflicts": {r.store: r.n_conflict for r in reports
+                          if r.n_conflict},
+            "timestamp": time.time(),
+        })
+    return reports
+
+
+def render_merge(reports: list[MergeReport], local_root: str,
+                 remote_root: str) -> str:
+    lines = [f"merge {remote_root} -> {local_root}"]
+    lines += ["  " + r.describe().replace("\n", "\n  ") for r in reports]
+    total = sum(r.n_added for r in reports)
+    lines.append(f"  total: {total} record(s)/file(s) added"
+                 + ("" if total else " (no-op)"))
+    return "\n".join(lines)

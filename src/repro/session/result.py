@@ -22,9 +22,10 @@ from typing import Any, TYPE_CHECKING
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.core.machine import MachineSpec
 
-#: RooflineResult.kind values, in paper-workflow order.
+#: RooflineResult.kind values, in paper-workflow order; the trailing
+#: three are the observability layer (repro.obs) over the stores.
 KINDS = ("characterize", "profile", "record", "report", "sweep", "tune",
-         "compare")
+         "compare", "trend", "advise", "merge")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,7 +166,7 @@ class RooflineResult:
                     n += 1
             if self.text:
                 parts.append(self.text)
-        else:                                   # sweep / tune / compare
+        else:               # sweep / tune / compare / trend / advise / merge
             parts.append(self.text)
         return "\n\n".join(p for p in parts if p)
 

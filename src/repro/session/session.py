@@ -9,6 +9,7 @@ them: one machine model, one :class:`~repro.session.workspace.Workspace`
 (one root for all three stores), and the workflow as first-class methods
 
     characterize → profile → record → report → sweep / tune → compare
+                → trend / advise / merge          (repro.obs, fleet view)
 
 every one returning a :class:`~repro.session.result.RooflineResult`.
 Callers never touch ``compile_fn`` / ``profile_fn`` / store classes
@@ -150,22 +151,35 @@ class Session:
     # -- 3. measured trace into the store (time-based roofline) ----------
     def record(self, config: str, *, seq: int = 32, batch: int = 4,
                amp: str = "O1", fusion: str = "off", smoke: bool = True,
-               iters: int = 5, warmup: int = 2,
+               iters: int = 5, warmup: int = 2, scale_wall: float = 1.0,
                meta: Mapping[str, Any] | None = None) -> RooflineResult:
         """Measure one config's train phases and append a provenance-
-        stamped record to the workspace trace store."""
+        stamped record to the workspace trace store.  ``scale_wall``
+        multiplies measured wall times before storing (regression
+        drills — the trend gate's acceptance test)."""
         from repro.trace.collector import collect_phases
         from repro.trace.store import record_from_phases
+
+        from repro.tune import active_kernel_configs
 
         phase_args, run = self._build_phases(
             config, seq=seq, batch=batch, amp=amp, fusion=fusion,
             smoke=smoke, concrete=True)
         ms = collect_phases(phase_args, machine=self.machine, iters=iters,
                             warmup=warmup, matmul_class=_matmul_class(run))
+        if scale_wall != 1.0:
+            from repro.trace.cli import scale_measurement
+            ms = {k: scale_measurement(m, scale_wall)
+                  for k, m in ms.items()}
+        # what the tune store offered at measurement time — the advisor's
+        # tune-mismatch rule diffs this stamp against the store later
+        kcfg = active_kernel_configs(machine=self.machine.name,
+                                     store=self.workspace.tune_store)
         rec = record_from_phases(
             config, ms, machine=self.machine.name,
             meta={"smoke": smoke, "seq": seq, "batch": batch, "amp": amp,
-                  "fusion": fusion, **dict(meta or {})})
+                  "fusion": fusion, "scale_wall": scale_wall,
+                  "kernel_configs": kcfg, **dict(meta or {})})
         self.workspace.trace_store.append(rec)
         self.workspace.write_header(self.machine.name)
         from repro.trace.timeline import ascii_timeline, build_timeline
@@ -305,6 +319,57 @@ class Session:
             text=format_deltas(deltas),
             data=deltas,
             exit_code=1 if has_regressions(deltas) else 0)
+
+    # -- 8. observability: trend / advise / merge (repro.obs) ------------
+    def trend(self, config: str | None = None, *, gate: bool = False,
+              tolerance: float | None = None,
+              bench_dirs: Sequence[str] | None = None,
+              max_rows: int = 40) -> RooflineResult:
+        """Perf-trend series over the workspace's stored history (trace
+        + sweep records + harvested ``BENCH_*.json``), sparkline report;
+        ``gate=True`` sets ``exit_code`` 1 when any lower-is-better
+        series regressed past the tolerance."""
+        from repro.obs.trend import (DEFAULT_TOLERANCE, collect_series,
+                                     gate_series, render_trend)
+        series = collect_series(self.workspace, config,
+                                bench_dirs=bench_dirs)
+        regressions = gate_series(
+            series, tolerance if tolerance is not None
+            else DEFAULT_TOLERANCE) if gate else None
+        return RooflineResult(
+            kind="trend", name=config or "all", machine=self.machine,
+            provenance=self._provenance(n_series=len(series),
+                                        gated=gate),
+            text=render_trend(series, regressions, max_rows=max_rows),
+            data=(series, regressions or []),
+            exit_code=1 if regressions else 0)
+
+    def advise(self, config: str | None = None, *, top: int = 0
+               ) -> RooflineResult:
+        """Mine the stored records for known bottleneck patterns; ranked
+        evidence-cited findings (``repro.obs.advisor``)."""
+        from repro.obs.advisor import advise, render_findings
+        findings = advise(self.workspace, config,
+                          machine=self.machine.name)
+        return RooflineResult(
+            kind="advise", name=config or "all", machine=self.machine,
+            provenance=self._provenance(n_findings=len(findings)),
+            text=render_findings(findings, top=top),
+            data=findings)
+
+    def merge(self, remote_root: str) -> RooflineResult:
+        """Union a remote workspace's stores into this one (run_id /
+        tune-key / harvest-file dedupe, skip-and-report conflicts,
+        provenance appended to ``workspace.json``)."""
+        from repro.obs.merge import merge_workspace, render_merge
+        reports = merge_workspace(self.workspace, remote_root)
+        return RooflineResult(
+            kind="merge", name=remote_root, machine=self.machine,
+            provenance=self._provenance(
+                added={r.store: r.n_added for r in reports}),
+            text=render_merge(reports, self.workspace.root,
+                              remote_root),
+            data=reports)
 
     # -- shared phase construction (the one registry path) ---------------
     def _build_phases(self, config: str, *, seq: int, batch: int, amp: str,

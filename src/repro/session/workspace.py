@@ -227,10 +227,31 @@ class Workspace:
             "stores": {k: os.path.basename(v)
                        for k, v in self.store_paths().items()},
         }
+        # merge provenance (repro.obs.merge) survives header refreshes the
+        # same way `created` does
+        if prev.get("merges"):
+            header["merges"] = prev["merges"]
+        self._write_header_doc(header)
+        return header
+
+    def _write_header_doc(self, header: dict[str, Any]) -> None:
         tmp = f"{self.header_path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             json.dump(header, f, indent=1, sort_keys=True)
         os.replace(tmp, self.header_path)
+
+    def record_merge(self, entry: dict[str, Any]) -> dict[str, Any]:
+        """Append one fleet-merge provenance entry (remote identity +
+        per-store added counts) to the header's ``merges`` list — which
+        remote workspaces this one has absorbed, and when."""
+        self.ensure()
+        header = self.read_header()
+        if not header:
+            header = {"schema_version": HEADER_SCHEMA_VERSION,
+                      "created": time.time()}
+        header.setdefault("merges", []).append(dict(entry))
+        header["updated"] = time.time()
+        self._write_header_doc(header)
         return header
 
     def read_header(self) -> dict[str, Any]:

@@ -131,23 +131,26 @@ def kernel_config_lines(records: Mapping[str, TraceRecord]
     return out
 
 
-def tune_mismatches(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
-                    tune_store=None) -> list[str]:
-    """Default-vs-tuned provenance check for measured sweep points.
+def tune_mismatch_rows(records: Mapping[str, TraceRecord]
+                       | Sequence[TraceRecord], tune_store=None,
+                       machine: str = "cpu-host") -> list[dict[str, Any]]:
+    """Structured default-vs-tuned provenance check for measured points.
 
     Each measured record carries ``meta.kernel_configs`` — the tune-store
     state when the point ran (``default`` = no winner existed for that
     kernel; ``tuned_available`` = winners existed, shape-keyed).  A point
     measured under ``default`` while the store now holds a tuned winner
     (or the reverse) is stale evidence: its wall times don't reflect the
-    configs a fresh run would resolve.  Returns one human-readable flag
-    line per mismatch (empty = all consistent).
+    configs a fresh run would resolve.  One row per mismatch:
+    ``{label, run_id, kernel, kind: "stale_default" | "vanished_tuned"}``
+    — the sweep report renders them as flag lines, the ``repro.obs``
+    advisor turns them into findings.
     """
     from repro.tune import tuned_kernels
-    now_tuned = set(tuned_kernels(tune_store, machine="cpu-host"))
+    now_tuned = set(tuned_kernels(tune_store, machine=machine))
     recs = list(records.values() if isinstance(records, Mapping)
                 else records)
-    flags: list[str] = []
+    rows: list[dict[str, Any]] = []
     for rec in recs:
         kcfg = rec.meta.get("kernel_configs")
         if not isinstance(kcfg, dict):
@@ -155,16 +158,31 @@ def tune_mismatches(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
         for kernel, info in sorted(kcfg.items()):
             source = info.get("source") if isinstance(info, dict) else None
             if source == "default" and kernel in now_tuned:
-                flags.append(
-                    f"{_label(rec)}: measured with default {kernel} "
-                    "config, but a tuned winner now exists — re-run "
-                    "(`repro.sweep run`) to pick it up")
+                rows.append({"label": _label(rec), "run_id": rec.run_id,
+                             "kernel": kernel, "kind": "stale_default"})
             elif source == "tuned_available" and kernel not in now_tuned:
-                flags.append(
-                    f"{_label(rec)}: measured while tuned {kernel} "
-                    "config(s) were available, but the tune store no "
-                    "longer has them — wall times are not reproducible "
-                    "from current state")
+                rows.append({"label": _label(rec), "run_id": rec.run_id,
+                             "kernel": kernel, "kind": "vanished_tuned"})
+    return rows
+
+
+def tune_mismatches(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
+                    tune_store=None) -> list[str]:
+    """Human-readable flag lines for :func:`tune_mismatch_rows` (empty =
+    all consistent) — the sweep-report rendering of the check."""
+    flags: list[str] = []
+    for row in tune_mismatch_rows(records, tune_store):
+        if row["kind"] == "stale_default":
+            flags.append(
+                f"{row['label']}: measured with default {row['kernel']} "
+                "config, but a tuned winner now exists — re-run "
+                "(`repro.sweep run`) to pick it up")
+        else:
+            flags.append(
+                f"{row['label']}: measured while tuned {row['kernel']} "
+                "config(s) were available, but the tune store no "
+                "longer has them — wall times are not reproducible "
+                "from current state")
     return flags
 
 

@@ -146,13 +146,18 @@ def cmd_record(args) -> int:
                 ms = {k: scale_measurement(m, args.scale_wall)
                       for k, m in ms.items()}
             # the fusion mode is part of the record's identity: a fused
-            # wall time is only comparable against other fused runs
+            # wall time is only comparable against other fused runs; the
+            # kernel_configs stamp is what the tune store offered at
+            # measurement time (repro.obs advisor diffs it later)
+            from repro.tune import active_kernel_configs
             rec = record_from_phases(
                 name, ms, machine=args.machine,
                 meta={"smoke": not args.full, "seq": args.seq,
                       "batch": args.batch, "amp": args.amp,
                       "fusion": args.fusion,
-                      "scale_wall": args.scale_wall})
+                      "scale_wall": args.scale_wall,
+                      "kernel_configs": active_kernel_configs(
+                          machine=args.machine)})
             store.append(rec)
         except Exception:
             failures += 1

@@ -100,9 +100,23 @@ class TraceRecord:
 
 def phase_payload(m: PhaseMeasurement, top_kernels: int = 8
                   ) -> dict[str, Any]:
-    """Serializable per-phase metrics (the record's unit cell)."""
+    """Serializable per-phase metrics (the record's unit cell).
+
+    Besides the top-``top_kernels`` kernel payloads, the cell keeps three
+    whole-phase launch totals computed over *every* kernel (the paper's
+    Table III census, per stored phase): total launches, zero-FLOP
+    launches, and scatter launches — the ``repro.obs`` advisor mines
+    them without re-lowering anything.
+    """
     t = m.terms
+    launches = sum(k.exec_count for k in m.kernels)
+    zero_ai = sum(k.exec_count for k in m.kernels if not k.flops)
+    scatter = sum(k.exec_count for k in m.kernels
+                  if "scatter" in k.name.lower())
     return {
+        "launches": launches,
+        "zero_ai_launches": zero_ai,
+        "scatter_launches": scatter,
         "wall_s": m.wall_s,
         "iters": m.iters,
         "achieved_flops_per_s": m.achieved_flops_per_s,

@@ -158,9 +158,16 @@ class TuneStore:
 
     # -- write -----------------------------------------------------------
     def put(self, rec: TuneRecord) -> TuneRecord:
-        records = dict(self._load())
-        records[rec.key] = rec.to_dict()
-        doc = {"schema_version": SCHEMA_VERSION, "records": records}
+        self.put_many({rec.key: rec.to_dict()})
+        return rec
+
+    def put_many(self, records: Mapping[str, Mapping[str, Any]]) -> None:
+        """Write several raw record dicts in one read-modify-write (one
+        atomic replace — the merge path folds a whole remote store in
+        without N rewrites)."""
+        merged = dict(self._load())
+        merged.update({k: dict(v) for k, v in records.items()})
+        doc = {"schema_version": SCHEMA_VERSION, "records": merged}
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
         tmp = f"{self.path}.tmp.{os.getpid()}"
@@ -168,7 +175,6 @@ class TuneStore:
             json.dump(doc, f, indent=1, sort_keys=True)
         os.replace(tmp, self.path)
         self._cache = None
-        return rec
 
 
 def make_record(kernel: str, shape: Sequence[int], dtype: str, machine: str,

@@ -41,7 +41,9 @@ _MODULE_RE = re.compile(r"python\s+-m\s+([A-Za-z_]\w*(?:\.\w+)*)")
 _REPRO_SUB_RE = re.compile(r"python\s+-m\s+repro\s+([a-z][a-z-]*)")
 
 # paths created at run time, legitimately quoted before they exist
-_GENERATED = ("benchmarks/results/",)
+# (matched as the bare directory or anything under it — the dir itself
+# is gitignored, so a fresh checkout doesn't have it either)
+_GENERATED = ("benchmarks/results",)
 
 
 def doc_files(args: list[str]) -> list[str]:
@@ -62,7 +64,8 @@ def check_paths(doc: str, text: str) -> list[str]:
         for m in _PATH_RE.finditer(line):
             path = m.group(1).rstrip(".")
             path = path.split(":")[0]               # strip :line suffixes
-            if any(path.startswith(g) for g in _GENERATED):
+            if any(path == g or path.startswith(g + "/")
+                   for g in _GENERATED):
                 continue
             if not os.path.exists(os.path.join(REPO_ROOT, path)):
                 problems.append(
