@@ -6,6 +6,14 @@ analysis names batch as the lever — this study quantifies it: lower the
 glm4-9b serve_step at growing global batch and watch the weight-read
 amortize (compute and cache traffic scale with B, weight traffic doesn't).
 
+Since PR 7 the per-batch cells persist through the serve trace path
+instead of an ad-hoc dict dump: each batch's analytical
+:class:`ProfileResult` becomes a trace-schema phase payload
+(``decode_b<gb>``), all batches land as one ``serve/decode_batch/<arch>``
+:class:`TraceRecord` in ``benchmarks/results/decode_batch_study.jsonl``
+(a real :class:`TraceStore` — readable by ``repro.trace`` / ``repro.obs``
+tooling), and the printed rows are derived from the *stored* payloads.
+
 Registered as a ``benchmarks.run`` suite, so the per-batch rows land in
 ``BENCH_<ts>.json`` and become a ``repro.obs.trend`` series (the
 bound-limited tok/s per batch is a pure function of the analytical model
@@ -18,7 +26,6 @@ overlap bound per decode step.
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 
@@ -30,45 +37,63 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results",
 BATCHES = (32, 128, 512, 2048)
 SMOKE_BATCHES = (32, 128)
 ARCH = "glm4-9b"
+MACHINE = "tpu-v5e"
+
+
+def study_record(batches=BATCHES, arch: str = ARCH):
+    """One TraceRecord: phase ``decode_b<gb>`` per batch (serve schema)."""
+    from repro.configs import base as B
+    from repro.launch import dryrun
+    from repro.session.result import payload_from_profile
+    from repro.trace.store import record_from_payloads
+
+    payloads, fit = {}, {}
+    for gb in batches:
+        # install a custom decode shape for this batch size
+        name = f"decode_32k_b{gb}"
+        B.SHAPES[name] = B.ShapeSpec(name, 32_768, gb, "decode")
+        rec, prof = dryrun.run_cell(arch, name, "single",
+                                    return_profile=True)
+        payloads[f"decode_b{gb}"] = payload_from_profile(prof)
+        fit[gb] = {"peak_device_bytes": rec["peak_device_bytes"],
+                   "fits_hbm": rec["fits_hbm"]}
+    return record_from_payloads(
+        f"serve/decode_batch/{arch}", payloads, machine=MACHINE,
+        meta={"study": "decode_batch", "batches": list(batches),
+              "seq": 32_768, "fit": fit})
 
 
 def study_rows(batches=BATCHES, arch: str = ARCH,
                results_path: str | None = RESULTS) -> list[Row]:
-    """One row per global batch + the amortization summary row."""
-    from repro.configs import base as B
-    from repro.launch import dryrun
+    """One row per global batch + the amortization summary row, every
+    number read back from the stored trace-schema payloads."""
+    from repro.serve.trace import memory_bound_fraction
+    from repro.trace.store import TraceStore
 
-    out = None
+    record = study_record(batches, arch)
     if results_path:
-        os.makedirs(os.path.dirname(results_path), exist_ok=True)
-        out = open(results_path, "w")
+        TraceStore(results_path).append(record)
+
     rows: list[Row] = []
-    recs = []
-    try:
-        for gb in batches:
-            # install a custom decode shape for this batch size
-            name = f"decode_32k_b{gb}"
-            B.SHAPES[name] = B.ShapeSpec(name, 32_768, gb, "decode")
-            rec = dryrun.run_cell(arch, name, "single")
-            rec["global_batch"] = gb
-            if out:
-                out.write(json.dumps(rec) + "\n")
-            recs.append((gb, rec))
-            tokens_per_bound = gb / max(rec["bound_overlap_s"], 1e-12)
-            rows.append((
-                f"decode_batch/{arch}_b{gb}",
-                rec["bound_overlap_s"] * 1e6,
-                f"frac={rec['roofline_fraction']:.4f};"
-                f"tok_s={tokens_per_bound:,.0f};"
-                f"peak_gib={rec['peak_device_bytes'] / 2**30:.1f};"
-                f"fits={rec['fits_hbm']}"))
-    finally:
-        if out:
-            out.close()
+    for gb in batches:
+        p = record.phases[f"decode_b{gb}"]
+        bound = max(p["bound_overlap_s"], 1e-12)
+        frac = p["compute_s"] / bound
+        f = record.meta["fit"][gb]
+        rows.append((
+            f"decode_batch/{arch}_b{gb}",
+            p["bound_overlap_s"] * 1e6,
+            f"frac={frac:.4f};"
+            f"tok_s={gb / bound:,.0f};"
+            f"mem_frac={memory_bound_fraction(p):.3f};"
+            f"peak_gib={f['peak_device_bytes'] / 2**30:.1f};"
+            f"fits={f['fits_hbm']}"))
     # amortization check: tokens/s at the roofline bound must grow
     # sublinearly-but-strongly with batch until the cache dominates
-    t0 = batches[0] / recs[0][1]["bound_overlap_s"]
-    t3 = batches[-1] / recs[-1][1]["bound_overlap_s"]
+    t0 = batches[0] / max(record.phases[f"decode_b{batches[0]}"]
+                          ["bound_overlap_s"], 1e-12)
+    t3 = batches[-1] / max(record.phases[f"decode_b{batches[-1]}"]
+                           ["bound_overlap_s"], 1e-12)
     rows.append((f"decode_batch/{arch}_amortization", 0.0,
                  f"tok_s={t0:,.0f}->{t3:,.0f};"
                  f"gain={t3 / t0:.1f}x;"

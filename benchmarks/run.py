@@ -38,6 +38,7 @@ SUITES = (
     "session_smoke",     # repro.session: whole workflow, one workspace root
     "decode_batch_study",  # beyond-paper: decode tok/s vs global batch
     "obs_smoke",         # repro.obs: merge→trend→advise fleet loop
+    "serve_bench",       # repro.serve: latency gate + phase attribution
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -11,6 +11,8 @@ root (``--workspace`` / ``REPRO_WORKSPACE``; default
   table, three-term bound, roofline chart) — paper §II-B;
 * ``record``       — measured trace appended to the workspace trace
   store (same flags as the old ``repro.trace record``);
+* ``serve``        — continuous-batching serving under a seeded arrival
+  trace; prefill/decode recorded as separate phases (``repro.serve``);
 * ``report``       — re-render the newest stored records, no re-running;
 * ``compare``      — cross-run regression gate (non-zero exit on
   regression);
@@ -34,6 +36,7 @@ Examples::
     PYTHONPATH=src python -m repro characterize --empirical --smoke
     PYTHONPATH=src python -m repro profile --config minitron-4b --charts 1
     PYTHONPATH=src python -m repro record --config minitron-4b --iters 5
+    PYTHONPATH=src python -m repro serve --config minitron-4b --requests 16
     PYTHONPATH=src python -m repro report
     PYTHONPATH=src python -m repro compare --config minitron-4b
     PYTHONPATH=src python -m repro sweep run --smoke
@@ -56,8 +59,8 @@ from repro.session.workspace import WORKSPACE_ENV, Workspace
 PROG = "python -m repro"
 
 #: workflow order — also the order the subcommands are registered in
-SUBCOMMANDS = ("characterize", "profile", "record", "report", "compare",
-               "sweep", "tune", "trend", "advise", "merge")
+SUBCOMMANDS = ("characterize", "profile", "record", "serve", "report",
+               "compare", "sweep", "tune", "trend", "advise", "merge")
 
 
 @contextlib.contextmanager
@@ -112,6 +115,27 @@ def cmd_profile(args) -> int:
         print(f"profile: {e.args[0] if e.args else e}", file=sys.stderr)
         return 2
     print(res.render(charts=args.charts, top_kernels=args.top))
+    return res.exit_code
+
+
+def cmd_serve(args) -> int:
+    s = _session(args)
+    try:
+        res = s.serve(args.config, n_requests=args.requests,
+                      trace=args.trace, rate=args.rate, burst=args.burst,
+                      seed=args.seed, n_slots=args.slots,
+                      max_len=args.max_len,
+                      prefill_chunk=args.prefill_chunk,
+                      page_size=args.page_size, amp=args.amp,
+                      fusion=args.fusion, smoke=not args.full,
+                      max_ticks=args.max_ticks)
+    except KeyError as e:
+        print(f"serve: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
+    except ValueError as e:             # non-servable family, bad trace
+        print(f"serve: {e}", file=sys.stderr)
+        return 2
+    print(res.render())
     return res.exit_code
 
 
@@ -281,6 +305,43 @@ def build_parser() -> argparse.ArgumentParser:
     # surface; the legacy `python -m repro.trace` flags stay unchanged
     for p in (rec, rep, cmp_):
         _add_workspace(p)
+
+    sv = sub.add_parser("serve",
+                        help="continuous-batching serving under a seeded "
+                             "arrival trace; prefill/decode recorded as "
+                             "separate phases (repro.serve)")
+    _add_workspace(sv)
+    sv.add_argument("--config", required=True,
+                    help="registry config name (dense/moe families)")
+    sv.add_argument("--machine", default="cpu-host",
+                    choices=sorted(MACHINES),
+                    help="machine model the bounds are against")
+    sv.add_argument("--requests", type=int, default=16,
+                    help="arrival-trace length (default 16)")
+    sv.add_argument("--trace", default="poisson",
+                    choices=("poisson", "bursty"),
+                    help="arrival process (default poisson)")
+    sv.add_argument("--rate", type=float, default=1.0,
+                    help="arrivals (or bursts) per tick (default 1.0)")
+    sv.add_argument("--burst", type=int, default=4,
+                    help="requests per burst for --trace bursty")
+    sv.add_argument("--seed", type=int, default=0,
+                    help="workload + weight-init seed (default 0)")
+    sv.add_argument("--slots", type=int, default=4,
+                    help="concurrent sequence slots (default 4)")
+    sv.add_argument("--max-len", type=int, default=64,
+                    help="max tokens per sequence incl. prompt")
+    sv.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens prefetched per tick (default 16)")
+    sv.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size in tokens (default 16)")
+    sv.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
+    sv.add_argument("--fusion", default="off", choices=("off", "auto"))
+    sv.add_argument("--full", action="store_true",
+                    help="full config instead of the smoke variant")
+    sv.add_argument("--max-ticks", type=int, default=4096,
+                    help="tick budget before the run is cut off")
+    sv.set_defaults(fn=cmd_serve)
 
     tr = sub.add_parser("trend",
                         help="perf-trend sparklines over stored records "

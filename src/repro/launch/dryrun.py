@@ -149,7 +149,15 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              machine_name: str = "tpu-v5e",
-             run_overrides: dict | None = None) -> dict:
+             run_overrides: dict | None = None,
+             return_profile: bool = False):
+    """Lower one (arch, shape, mesh) cell and analyze it.
+
+    Returns the summary dict; ``return_profile=True`` additionally hands
+    back the underlying :class:`ProfileResult` as ``(rec, prof)`` so
+    callers (``benchmarks.decode_batch_study``) can re-serialize the cell
+    through the trace-store phase schema instead of this dict.
+    """
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     cfg = get_config(arch)
@@ -236,6 +244,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     rec["adj_dominant"] = adj.dominant
     rec["adj_roofline_fraction"] = adj.roofline_fraction
     rec["adj_bytes_removed"] = removed
+    if return_profile:
+        return rec, prof
     return rec
 
 

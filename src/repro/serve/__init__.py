@@ -1,0 +1,15 @@
+"""Continuous-batching serving: paged KV-cache, arrival traces, metrics,
+and per-phase (prefill/decode) roofline attribution (docs/DESIGN.md §15)."""
+
+from repro.serve.engine import Engine, Request, SERVABLE_FAMILIES
+from repro.serve.metrics import ServeStats, percentile, stats_from_requests
+from repro.serve.paged_kv import DEFAULT_PAGE_SIZE, PagedKVCache
+from repro.serve.workload import (TRACES, bursty_trace, make_trace,
+                                  poisson_trace)
+
+__all__ = [
+    "Engine", "Request", "SERVABLE_FAMILIES",
+    "ServeStats", "percentile", "stats_from_requests",
+    "DEFAULT_PAGE_SIZE", "PagedKVCache",
+    "TRACES", "bursty_trace", "make_trace", "poisson_trace",
+]

@@ -1,0 +1,185 @@
+"""Paged KV-cache: fixed-size pages + a free-list, vLLM-style.
+
+The seed engine reserved one contiguous ``max_len`` cache row per slot —
+a request with a 5-token prompt held the same HBM as one at the context
+limit.  Here the cache is a *pool* of fixed-size pages shared by every
+slot: each slot owns an ordered page list (its page-table row) and pages
+return to the free-list the tick a request completes, so resident cache
+bytes track the tokens actually alive.
+
+Layout (one pool per K and V):
+
+* ``k_pool / v_pool``: ``(L, n_pages, page_size, K, hd)`` device arrays —
+  the storage of truth;
+* ``page_table``: ``(n_slots, pages_per_slot)`` host int32, ``-1`` = not
+  allocated; row order is token order (logical position ``p`` lives in
+  page ``table[slot, p // page_size]`` at offset ``p % page_size``);
+* ``free``: host free-list of page ids (LIFO — recently freed pages are
+  re-used first, keeping the working set compact).
+
+The decode/prefill consumers never loop over pages on device: they
+``gather`` a slot's pages into a dense ``(L, S_pad, K, hd)`` view (one
+``jnp.take``) and *scatter* new tokens back by ``(page, offset)`` index
+pairs with ``mode="drop"`` — a ``-1`` page id drops the write, which is
+how padded chunk positions and inactive slots are masked for free.
+
+Allocation is host-side bookkeeping (a python free-list); the accounting
+invariant — every page is either free or owned by exactly one slot — is
+checked by :meth:`PagedKVCache.check` and enforced by the property tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+DEFAULT_PAGE_SIZE = 16
+
+
+class PagedKVCache:
+    """Fixed-page KV pool shared by ``n_slots`` sequences."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 n_pages: int | None = None, dtype=jnp.bfloat16):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)      # ceil
+        # default pool = full reservation (decode growth can never fail);
+        # smaller pools exercise allocation pressure in tests
+        self.n_pages = (n_pages if n_pages is not None
+                        else n_slots * self.pages_per_slot)
+        self.dtype = dtype
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        shape = (L, self.n_pages, page_size, K, hd)
+        self.k_pool = jnp.zeros(shape, dtype)
+        self.v_pool = jnp.zeros(shape, dtype)
+        self.page_table = np.full((n_slots, self.pages_per_slot), -1,
+                                  np.int32)
+        self.lengths = np.zeros(n_slots, np.int32)          # tokens stored
+        self.free: list[int] = list(range(self.n_pages - 1, -1, -1))
+
+    # -- allocator ---------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages a sequence of ``n_tokens`` occupies."""
+        return -(-n_tokens // self.page_size)
+
+    def slot_pages(self, slot: int) -> list[int]:
+        row = self.page_table[slot]
+        return [int(p) for p in row if p >= 0]
+
+    def can_alloc(self, slot: int, upto_len: int) -> bool:
+        have = len(self.slot_pages(slot))
+        return self.pages_for(upto_len) - have <= len(self.free)
+
+    def alloc(self, slot: int, upto_len: int) -> bool:
+        """Grow ``slot``'s page list to cover ``upto_len`` tokens.
+
+        All-or-nothing: returns False (allocating nothing) when the
+        free-list can't cover the growth — the engine's graceful-degrade
+        seam, never a partially-grown slot.
+        """
+        if upto_len > self.max_len:
+            return False
+        need = self.pages_for(upto_len)
+        have = len(self.slot_pages(slot))
+        if need - have > len(self.free):
+            return False
+        for i in range(have, need):
+            self.page_table[slot, i] = self.free.pop()
+        return True
+
+    def release(self, slot: int) -> int:
+        """Return every page of ``slot`` to the free-list; pages freed."""
+        pages = self.slot_pages(slot)
+        self.free.extend(reversed(pages))
+        self.page_table[slot] = -1
+        self.lengths[slot] = 0
+        return len(pages)
+
+    def check(self) -> None:
+        """Allocator invariants: free + owned == all, no page owned twice."""
+        owned = [int(p) for row in self.page_table for p in row if p >= 0]
+        if len(set(owned)) != len(owned):
+            raise AssertionError(f"page owned twice: {sorted(owned)}")
+        if set(owned) & set(self.free):
+            raise AssertionError("page both free and owned: "
+                                 f"{sorted(set(owned) & set(self.free))}")
+        if len(owned) + len(self.free) != self.n_pages:
+            raise AssertionError(
+                f"page leak: {len(owned)} owned + {len(self.free)} free "
+                f"!= {self.n_pages} total")
+
+    # -- device-view helpers ----------------------------------------------
+    @property
+    def padded_len(self) -> int:
+        """Dense per-slot view length (``pages_per_slot * page_size``)."""
+        return self.pages_per_slot * self.page_size
+
+    def table_device(self) -> jax.Array:
+        return jnp.asarray(self.page_table)
+
+    def write_coords(self, slot: int, start: int, n: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """(page_ids, offsets) for logical positions ``start..start+n-1``.
+
+        Positions beyond an allocated page get page id ``-1`` (the scatter
+        drops them) — callers pad with ``n`` larger than the valid token
+        count and rely on the drop.
+        """
+        pos = start + np.arange(n)
+        page_idx = pos // self.page_size
+        in_range = page_idx < self.pages_per_slot
+        pages = np.where(in_range,
+                         self.page_table[slot, np.minimum(
+                             page_idx, self.pages_per_slot - 1)],
+                         -1).astype(np.int32)
+        offs = (pos % self.page_size).astype(np.int32)
+        return pages, offs
+
+    # -- host-side read/write (tests + reference path) ---------------------
+    def write(self, slot: int, start: int, k: Any, v: Any) -> None:
+        """Store ``k``/``v`` ``(L, T, K, hd)`` at logical ``start`` (host
+        helper — the engine scatters inside its jitted step instead)."""
+        k = jnp.asarray(k, self.dtype)
+        v = jnp.asarray(v, self.dtype)
+        T = k.shape[1]
+        if not self.alloc(slot, start + T):
+            raise ValueError(
+                f"slot {slot}: cannot allocate {start + T} tokens "
+                f"({len(self.free)} pages free)")
+        pages, offs = self.write_coords(slot, start, T)
+        pg = jnp.asarray(pages)
+        of = jnp.asarray(offs)
+        # adjacent advanced indices: selected shape is (L, T, K, hd)
+        self.k_pool = self.k_pool.at[:, pg, of].set(k, mode="drop")
+        self.v_pool = self.v_pool.at[:, pg, of].set(v, mode="drop")
+        self.lengths[slot] = max(int(self.lengths[slot]), start + T)
+
+    def read(self, slot: int, length: int | None = None) -> tuple:
+        """Dense ``(L, length, K, hd)`` K and V of one slot."""
+        n = int(self.lengths[slot]) if length is None else length
+        row = jnp.asarray(self.page_table[slot])
+        k = jnp.take(self.k_pool, row.clip(0), axis=1)  # (L, P, page, K, hd)
+        v = jnp.take(self.v_pool, row.clip(0), axis=1)
+        L = k.shape[0]
+        k = k.reshape(L, self.padded_len, *k.shape[3:])[:, :n]
+        v = v.reshape(L, self.padded_len, *v.shape[3:])[:, :n]
+        return k, v

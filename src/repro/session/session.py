@@ -191,6 +191,75 @@ class Session:
             text=ascii_timeline(build_timeline(ms)),
             data=rec)
 
+    # -- 3b. serving under load (continuous batching, repro.serve) -------
+    def serve(self, config: str, *, n_requests: int = 16,
+              trace: str = "poisson", rate: float = 1.0, burst: int = 4,
+              seed: int = 0, n_slots: int = 4, max_len: int = 64,
+              prefill_chunk: int = 16, page_size: int = 16,
+              prompt_len: tuple[int, int] = (4, 16),
+              max_new: tuple[int, int] = (4, 16),
+              amp: str = "O1", fusion: str = "off", smoke: bool = True,
+              max_ticks: int = 4096,
+              meta: Mapping[str, Any] | None = None) -> RooflineResult:
+        """Serve a seeded synthetic arrival trace through the continuous-
+        batching engine and record prefill/decode as *separate* phase
+        payloads in the trace store (config key ``serve/<name>``).
+
+        The compiled executables the engine drove under the wall clock
+        are re-analyzed (never re-jitted) and their envelopes scaled by
+        call counts, so the stored record answers the paper's question
+        per serving phase: decode is bandwidth-dominated at small batch,
+        chunked prefill sits far closer to the compute ceiling.
+        ``exit_code`` is 1 when the latency gate fails (a wedged
+        scheduler, an admitted request that never finished).
+        """
+        import jax
+
+        from repro.configs.base import RunConfig
+        from repro.configs.registry import get_config, get_smoke
+        from repro.models import api as M
+        from repro.models.params import init
+        from repro.serve.engine import Engine
+        from repro.serve.trace import serve_record
+        from repro.serve.workload import make_trace
+        from repro.tune import active_kernel_configs
+
+        cfg = get_smoke(config) if smoke else get_config(config)
+        run = RunConfig(amp=amp, fusion=fusion)
+        params = init(jax.random.PRNGKey(seed), M.build(cfg).spec)
+        engine = Engine(cfg, run, params, n_slots=n_slots, max_len=max_len,
+                        page_size=page_size, prefill_chunk=prefill_chunk)
+        pl = (min(prompt_len[0], max_len), min(prompt_len[1], max_len))
+        kw = {"burst": burst} if trace == "bursty" else {}
+        reqs = make_trace(trace, n_requests, rate=rate, seed=seed,
+                          vocab=cfg.vocab_size, prompt_len=pl,
+                          max_new=max_new, **kw)
+        stats = engine.run_trace(reqs, max_ticks=max_ticks)
+        kcfg = active_kernel_configs(machine=self.machine.name,
+                                     store=self.workspace.tune_store)
+        rec = serve_record(
+            config, engine, stats, self.machine,
+            matmul_class=_matmul_class(run),
+            meta={"smoke": smoke, "amp": amp, "fusion": fusion,
+                  "trace": trace, "n_requests": n_requests,
+                  "n_slots": n_slots, "max_len": max_len,
+                  "prefill_chunk": engine.chunk, "page_size": page_size,
+                  "seed": seed, "kernel_configs": kcfg,
+                  **dict(meta or {})})
+        self.workspace.trace_store.append(rec)
+        self.workspace.write_header(self.machine.name)
+        problems = stats.gate()
+        text = stats.render()
+        if problems:
+            text += "\n" + "\n".join(f"GATE: {p}" for p in problems)
+        return RooflineResult(
+            kind="record", name=f"serve/{config}", machine=self.machine,
+            provenance=self._provenance(run_id=rec.run_id,
+                                        store=self.workspace.trace_path),
+            phases=phases_from_record(rec),
+            text=text, data=(rec, stats),
+            exit_code=1 if problems else 0)
+
     # -- 4. read back without re-running ---------------------------------
     def report(self, config: str | None = None) -> RooflineResult:
         """Newest stored record for ``config`` (or the newest record of

@@ -133,6 +133,82 @@ class TestRoPE:
         assert abs(ip(3 + shift, shift) - ip(3, 0)) < 1e-3
 
 
+class TestPagedKV:
+    """Paged KV-cache vs a dense reference under random op sequences
+    (ISSUE PR 7 satellite): any interleaving of appends and releases on
+    any page size must read back exactly what a contiguous buffer would
+    hold, and the allocator books must balance after every op."""
+
+    N_SLOTS, MAX_LEN = 2, 12
+
+    @given(page_size=st.integers(1, 5),
+           ops=st.lists(
+               st.tuples(st.sampled_from(["write", "release"]),
+                         st.integers(0, N_SLOTS - 1), st.integers(1, 5)),
+               max_size=10))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_vs_dense_reference(self, page_size, ops):
+        from repro.configs.registry import get_smoke
+        from repro.serve.paged_kv import PagedKVCache
+
+        cfg = get_smoke("minitron-4b")
+        cache = PagedKVCache(cfg, self.N_SLOTS, self.MAX_LEN,
+                             page_size=page_size)
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        rng = np.random.default_rng(page_size)
+        empty = np.zeros((L, 0, K, hd), np.float32)
+        ref = {s: (empty, empty) for s in range(self.N_SLOTS)}
+
+        for kind, slot, n in ops:
+            start = ref[slot][0].shape[1]
+            if kind == "write" and start + n <= self.MAX_LEN:
+                k = rng.normal(size=(L, n, K, hd)).astype(np.float32)
+                v = rng.normal(size=(L, n, K, hd)).astype(np.float32)
+                cache.write(slot, start, k, v)
+                ref[slot] = (np.concatenate([ref[slot][0], k], axis=1),
+                             np.concatenate([ref[slot][1], v], axis=1))
+            elif kind == "release":
+                cache.release(slot)
+                ref[slot] = (empty, empty)
+            cache.check()
+            for s in range(self.N_SLOTS):
+                n_tok = ref[s][0].shape[1]
+                assert int(cache.lengths[s]) == n_tok
+                got_k, got_v = cache.read(s, n_tok)
+                for got, want in ((got_k, ref[s][0]), (got_v, ref[s][1])):
+                    # storage is bf16: exact equality vs the bf16 cast
+                    expect = np.asarray(jnp.asarray(want, jnp.bfloat16),
+                                        np.float32)
+                    np.testing.assert_array_equal(
+                        np.asarray(got, np.float32), expect)
+
+        used = sum(cache.pages_for(ref[s][0].shape[1])
+                   for s in range(self.N_SLOTS))
+        assert cache.n_used == used
+
+    @given(st.integers(1, 5), st.integers(1, 12))
+    @settings(**SETTINGS)
+    def test_write_coords_cover_positions_exactly_once(self, page_size, n):
+        """(page, offset) pairs of a fresh allocation are distinct, in
+        token order within each page, and OOB positions map to -1."""
+        from repro.configs.registry import get_smoke
+        from repro.serve.paged_kv import PagedKVCache
+
+        cache = PagedKVCache(get_smoke("minitron-4b"), 1, self.MAX_LEN,
+                             page_size=page_size)
+        n = min(n, self.MAX_LEN)
+        assert cache.alloc(0, n)
+        pages, offs = cache.write_coords(0, 0, cache.padded_len)
+        live = [(int(p), int(o)) for p, o in zip(pages, offs) if p >= 0]
+        assert len(live) == len(set(live))       # no position aliases
+        assert len(live) >= n                    # every token has a home
+        assert all(0 <= o < page_size for _, o in live)
+        # positions past the allocated pages drop (-1), nothing else
+        allocated = cache.pages_for(n) * page_size
+        assert all(int(p) == -1 for p in pages[allocated:])
+        assert all(int(p) >= 0 for p in pages[:allocated])
+
+
 class TestDataDeterminism:
     @given(st.integers(0, 1000))
     @settings(max_examples=20, deadline=None)

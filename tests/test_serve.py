@@ -1,5 +1,12 @@
 """Serving engine tests: prefill/forward consistency, continuous batching,
-slot reuse, EOS handling."""
+paged-KV accounting, scheduler invariants (deterministic tick-by-tick
+simulation), and fault injection (ISSUE PR 7 satellites).
+
+The scheduler tests never assert on wall time — only on the integer tick
+clock and the allocator's bookkeeping, so they are deterministic on any
+host.  ``cache.check()`` (every page free xor owned by exactly one slot)
+runs after *every* tick of every simulation.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +17,8 @@ from repro.configs.base import RunConfig
 from repro.configs.registry import get_smoke
 from repro.models import build
 from repro.models.params import init
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import SERVABLE_FAMILIES, Engine, Request
+from repro.serve.workload import bursty_trace, make_trace, poisson_trace
 
 RUN = RunConfig(amp="O1")
 
@@ -21,6 +29,38 @@ def setup():
     model = build(cfg)
     params = init(jax.random.PRNGKey(0), model.spec)
     return cfg, model, params
+
+
+def tick_with_invariants(eng: Engine) -> None:
+    """One engine tick followed by the allocator + scheduler invariants
+    every simulation in this file re-checks."""
+    eng.tick()
+    eng.cache.check()                       # no page leaked / owned twice
+    for i, slot in enumerate(eng._slots):
+        if slot is None:
+            assert not eng.cache.slot_pages(i), \
+                f"empty slot {i} still owns pages"
+        else:
+            have = len(eng.cache.slot_pages(i))
+            need = eng.cache.pages_for(int(eng.cache.lengths[i]))
+            assert have >= need, f"slot {i}: {have} pages < {need} needed"
+            assert len(slot.req.out) <= slot.req.max_new
+
+
+def drive(eng: Engine, reqs: list[Request], max_ticks: int = 300) -> int:
+    """Deterministic tick-by-tick trace driver (the run_trace loop, with
+    invariants checked after every tick); returns ticks consumed."""
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    i = 0
+    for t in range(max_ticks):
+        while i < len(pending) and pending[i].arrival <= eng.tick_count:
+            eng.submit(pending[i])
+            i += 1
+        if i == len(pending) and not eng.queue and eng.n_active == 0:
+            return t
+        tick_with_invariants(eng)
+    raise AssertionError(f"engine wedged: {max_ticks} ticks, "
+                         f"{eng.n_active} active, {len(eng.queue)} queued")
 
 
 class TestEngine:
@@ -50,6 +90,24 @@ class TestEngine:
         eng.serve([r])
         assert r.out == seq[len(prompt):]
 
+    def test_chunked_prefill_matches_forward_continuation(self, setup):
+        """Multi-chunk prefill (prefill_first + prefill_ext across page
+        boundaries) is bit-exact with the full-forward greedy reference."""
+        cfg, model, params = setup
+        prompt = np.arange(11, dtype=np.int32) % cfg.vocab_size
+        seq = list(prompt)
+        for _ in range(3):
+            lg = model.forward_fn(
+                params, {"tokens": jnp.asarray(seq, jnp.int32)[None]}, RUN)
+            seq.append(int(jnp.argmax(lg[0, -1, :cfg.vocab_size])))
+        eng = Engine(cfg, RUN, params, n_slots=1, max_len=16,
+                     prefill_chunk=4, page_size=4)
+        r = Request(0, prompt, max_new=3)
+        eng.serve([r])
+        assert eng.calls["prefill_first"] == 1
+        assert eng.calls["prefill_ext"] == 2           # 11 tokens / chunk 4
+        assert r.out == seq[len(prompt):]
+
     def test_continuous_batching_completes_more_requests_than_slots(
             self, setup):
         cfg, _, params = setup
@@ -73,7 +131,241 @@ class TestEngine:
         assert r.done and len(r.out) == 1
 
     def test_rejects_non_kv_families(self, setup):
-        cfg = get_smoke("mamba2-1.3b")
-        params = init(jax.random.PRNGKey(0), build(cfg).spec)
-        with pytest.raises(ValueError):
-            Engine(cfg, RUN, params)
+        for arch in ("mamba2-1.3b", "phi-3-vision-4.2b", "zamba2-1.2b"):
+            cfg = get_smoke(arch)
+            assert cfg.family not in SERVABLE_FAMILIES
+            params = init(jax.random.PRNGKey(0), build(cfg).spec)
+            with pytest.raises(ValueError, match="Engine serves"):
+                Engine(cfg, RUN, params)
+
+
+class TestSchedulerInvariants:
+    """Deterministic tick-by-tick simulation on seeded arrival traces."""
+
+    @pytest.fixture(scope="class")
+    def served(self, setup):
+        """One seeded Poisson trace driven with per-tick invariants; the
+        assertions below all read this single simulation."""
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=2, max_len=16,
+                     prefill_chunk=4, page_size=4)
+        reqs = poisson_trace(8, rate=0.7, seed=3, vocab=cfg.vocab_size,
+                             prompt_len=(2, 8), max_new=(2, 5))
+        ticks = drive(eng, reqs)
+        return eng, reqs, ticks
+
+    def test_all_requests_complete_and_release(self, served):
+        eng, reqs, _ = served
+        assert all(r.status == "done" for r in reqs)
+        assert eng.cache.n_used == 0 and eng.n_active == 0
+        assert not eng.queue
+        assert sorted(eng.cache.free) == list(range(eng.cache.n_pages))
+
+    def test_fifo_admission_order(self, served):
+        """Head-of-line FIFO: admission order is submission order."""
+        _, reqs, _ = served
+        by_submit = sorted(reqs, key=lambda r: (r.arrival, r.uid))
+        admits = [r.admit_tick for r in by_submit]
+        assert admits == sorted(admits)
+
+    def test_no_starvation_bounded_queue_wait(self, served):
+        """Every request is admitted, and no later-arriving request makes
+        an earlier one wait unboundedly: with 2 slots the head of the
+        queue waits at most the ticks the running pair needs to drain."""
+        _, reqs, ticks = served
+        assert all(r.admit_tick is not None for r in reqs)
+        worst_service = max(
+            -(-len(r.prompt) // 4) + r.max_new for r in reqs)  # chunks+decode
+        waits = [r.admit_tick - r.arrival for r in reqs]
+        assert max(waits) <= len(reqs) * worst_service
+        assert ticks < 300
+
+    def test_output_never_exceeds_max_new(self, served):
+        _, reqs, _ = served
+        assert all(1 <= len(r.out) <= r.max_new for r in reqs)
+
+    def test_tick_stamps_are_consistent(self, served):
+        """arrival ≤ admit ≤ first-token ≤ done on the tick clock, and
+        the wall stamps exist and are ordered the same way."""
+        _, reqs, _ = served
+        for r in reqs:
+            assert r.arrival <= r.admit_tick <= r.first_tick <= r.done_tick
+            assert r.t_arrival <= r.t_first <= r.t_done
+
+    def test_eos_frees_slot_same_tick(self, setup):
+        """An EOS token retires the sequence in the tick that produced
+        it: pages back on the free-list, slot reusable immediately."""
+        cfg, model, params = setup
+        prompt = np.array([2, 4], np.int32)
+        lg = model.forward_fn(params,
+                              {"tokens": jnp.asarray(prompt)[None]}, RUN)
+        first = int(jnp.argmax(lg[0, -1, :cfg.vocab_size]))
+        eng = Engine(cfg, RUN, params, n_slots=1, max_len=16,
+                     eos_id=first)
+        r = Request(0, prompt, max_new=8)
+        eng.submit(r)
+        while not r.done:
+            tick_with_invariants(eng)
+        assert r.finish_reason == "eos"
+        assert r.done_tick == r.first_tick       # EOS was the first token
+        assert eng.cache.n_used == 0 and eng.n_active == 0
+
+
+class TestFaults:
+    """Reject-and-report, never wedge: every fault leaves the engine
+    serving and the allocator clean."""
+
+    @pytest.fixture()
+    def engine(self, setup):
+        cfg, _, params = setup
+        return Engine(cfg, RUN, params, n_slots=2, max_len=16,
+                      prefill_chunk=4, page_size=4, queue_capacity=2)
+
+    def test_empty_prompt_rejected(self, engine):
+        r = Request(0, np.array([], np.int32))
+        assert not engine.submit(r)
+        assert (r.status, r.finish_reason) == ("rejected", "empty_prompt")
+        assert not engine.queue
+
+    def test_prompt_past_max_len_rejected(self, engine):
+        r = Request(0, np.arange(17, dtype=np.int32))
+        assert not engine.submit(r)
+        assert (r.status, r.finish_reason) == ("rejected",
+                                               "prompt_too_long")
+
+    def test_queue_overflow_rejected(self, engine):
+        reqs = [Request(i, np.array([1, 2], np.int32)) for i in range(3)]
+        assert engine.submit(reqs[0]) and engine.submit(reqs[1])
+        assert not engine.submit(reqs[2])
+        assert reqs[2].finish_reason == "queue_full"
+        assert len(engine.queue) == 2
+
+    def test_faults_do_not_wedge_the_trace(self, setup):
+        """A trace mixing good and bad requests still drains: the bad
+        ones are rejected with reasons, the good ones complete."""
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=2, max_len=16,
+                     prefill_chunk=4, page_size=4, queue_capacity=8)
+        reqs = [Request(0, np.array([1, 2], np.int32), max_new=2),
+                Request(1, np.array([], np.int32), max_new=2),
+                Request(2, np.arange(99, dtype=np.int32), max_new=2),
+                Request(3, np.array([3, 4, 5], np.int32), max_new=2)]
+        stats = eng.run_trace(reqs)
+        assert [r.status for r in reqs] == ["done", "rejected",
+                                            "rejected", "done"]
+        assert stats.n_completed == 2 and stats.n_rejected == 2
+        assert not stats.gate()
+        assert eng.cache.n_used == 0
+
+    def test_cancel_queued_request(self, engine):
+        r1 = Request(0, np.array([1, 2], np.int32))
+        r2 = Request(1, np.array([3, 4], np.int32))
+        engine.submit(r1), engine.submit(r2)
+        assert engine.cancel(1)
+        assert r2.status == "cancelled" and r2.done
+        assert [q.uid for q in engine.queue] == [0]
+        assert not engine.cancel(99)            # unknown uid: reported
+
+    def test_cancel_midstream_frees_pages_immediately(self, setup):
+        """Cancelling an active request releases its slot + pages the
+        same call; the other in-flight request is undisturbed."""
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=2, max_len=16,
+                     prefill_chunk=4, page_size=4)
+        victim = Request(0, np.arange(8, dtype=np.int32), max_new=8)
+        other = Request(1, np.array([1, 2], np.int32), max_new=3)
+        eng.submit(victim), eng.submit(other)
+        tick_with_invariants(eng)               # both admitted + running
+        assert victim.status == "active" and eng.cache.n_used > 0
+        used_before = eng.cache.n_used
+        assert eng.cancel(0)
+        eng.cache.check()
+        assert victim.status == "cancelled" and victim.done
+        assert eng.cache.n_used < used_before   # pages back immediately
+        while not other.done:
+            tick_with_invariants(eng)
+        assert other.status == "done" and len(other.out) == 3
+        assert eng.cache.n_used == 0
+
+    def test_pool_exhaustion_truncates_instead_of_wedging(self, setup):
+        """An undersized page pool finishes sequences ``truncated`` —
+        graceful degrade, not a deadlock or a leak."""
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=2, max_len=16,
+                     prefill_chunk=4, page_size=4, n_pages=2)
+        reqs = [Request(i, np.array([1 + i, 2], np.int32), max_new=12)
+                for i in range(2)]
+        drive(eng, reqs)
+        assert all(r.status == "done" for r in reqs)
+        assert all(r.finish_reason == "truncated" for r in reqs)
+        assert all(len(r.out) >= 1 for r in reqs)
+        assert eng.cache.n_used == 0
+
+
+class TestEdgeCases:
+    def test_prompt_exactly_max_len(self, setup):
+        """A prompt at the context limit admits, yields exactly one
+        token, and finishes ``truncated`` (no room for its K/V)."""
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=1, max_len=8,
+                     prefill_chunk=4, page_size=4)
+        r = Request(0, np.arange(8, dtype=np.int32), max_new=5)
+        drive(eng, [r])
+        assert r.status == "done" and r.finish_reason == "truncated"
+        assert len(r.out) == 1
+        assert eng.cache.n_used == 0
+
+    def test_single_slot_serializes_a_trace(self, setup):
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=1, max_len=16,
+                     prefill_chunk=4, page_size=4)
+        reqs = [Request(i, np.array([1 + i, 2, 3], np.int32), max_new=2,
+                        arrival=0) for i in range(3)]
+        drive(eng, reqs)
+        assert all(r.status == "done" for r in reqs)
+        # one slot: service windows never overlap and preserve FIFO
+        spans = sorted((r.admit_tick, r.done_tick) for r in reqs)
+        for (_, d0), (a1, _) in zip(spans, spans[1:]):
+            assert a1 >= d0
+
+    def test_prefill_chunk_clamped_to_max_len(self, setup):
+        cfg, _, params = setup
+        eng = Engine(cfg, RUN, params, n_slots=1, max_len=8,
+                     prefill_chunk=64)
+        assert eng.chunk == 8
+
+    def test_zero_slots_rejected(self, setup):
+        cfg, _, params = setup
+        with pytest.raises(ValueError, match="n_slots"):
+            Engine(cfg, RUN, params, n_slots=0)
+
+
+class TestWorkload:
+    def test_traces_are_seed_deterministic(self):
+        a = poisson_trace(12, rate=0.5, seed=7, vocab=64)
+        b = poisson_trace(12, rate=0.5, seed=7, vocab=64)
+        assert [(r.uid, r.arrival, r.max_new, list(r.prompt))
+                for r in a] == [(r.uid, r.arrival, r.max_new,
+                                 list(r.prompt)) for r in b]
+        c = poisson_trace(12, rate=0.5, seed=8, vocab=64)
+        assert [r.arrival for r in a] != [r.arrival for r in c] or \
+            [list(r.prompt) for r in a] != [list(r.prompt) for r in c]
+
+    def test_trace_shapes_and_bounds(self):
+        for trace in (poisson_trace(10, rate=1.0, seed=0, vocab=32,
+                                    prompt_len=(2, 6), max_new=(1, 4)),
+                      bursty_trace(10, rate=1.0, seed=0, vocab=32,
+                                   prompt_len=(2, 6), max_new=(1, 4))):
+            assert len(trace) == 10
+            arrivals = [r.arrival for r in trace]
+            assert arrivals == sorted(arrivals)
+            for r in trace:
+                assert 2 <= len(r.prompt) <= 6
+                assert 1 <= r.max_new <= 4
+                assert np.all((r.prompt >= 0) & (r.prompt < 32))
+
+    def test_make_trace_dispatch(self):
+        assert make_trace("poisson", 3, rate=1.0, seed=0, vocab=8)
+        assert make_trace("bursty", 3, rate=1.0, seed=0, vocab=8, burst=2)
+        with pytest.raises(KeyError):
+            make_trace("nope", 3, rate=1.0, seed=0, vocab=8)
