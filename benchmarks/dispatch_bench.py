@@ -1,0 +1,107 @@
+"""Dispatch routing gates: measured-best must not lose to static fusion.
+
+The acceptance contract of the measurement-driven dispatch loop
+(``repro.tune.dispatch``, docs/DESIGN.md §16), as two hard gates — each
+*raises* on violation (→ suite ERROR → non-zero driver exit):
+
+* **step gate** — the measured-dispatch train step (``fusion="auto"``
+  routed by a populated, frozen dispatch table) must be ≤ the static
+  fused step (``fusion="static"``) within ``STEP_TOLERANCE``.  Per-site
+  the routed impl is the measured min of {fused, reference}, so the
+  whole-step wall can only lose to static through timing noise — the
+  tolerance (10%) covers exactly that host noise, nothing more;
+* **table gate** — no stored winner may be slower than the losing impl
+  it replaced: every persisted :class:`DispatchRecord` must satisfy
+  ``wall(impl) <= wall(other)``.  True by construction of
+  ``measure_site`` — this gate guards that construction against
+  regressions.
+
+The ``off`` step is also timed for context (the headline before/after).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.dispatch_bench
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import Row
+from benchmarks.zero_ai_census import LM_BATCH, LM_CONFIG, LM_SEQ
+
+# measured step must satisfy wall_auto <= wall_static * STEP_TOLERANCE:
+# per-site routing picks the measured min, so only host timing noise can
+# push the routed step above static — 10% bounds that noise on CI runners
+STEP_TOLERANCE = 1.10
+
+
+def bench_rows(config: str = LM_CONFIG, seq: int = LM_SEQ,
+               batch: int = LM_BATCH, iters: int = 3,
+               warmup: int = 1) -> list[Row]:
+    from repro.configs.base import RunConfig
+    from repro.configs.registry import get_smoke
+    from repro.core.machine import get_machine
+    from repro.models import build
+    from repro.trace.cli import build_phase_args
+    from repro.trace.collector import collect_phases
+    from repro.tune import dispatch as dsp
+    from repro.tune.store import TuneStore
+
+    machine = get_machine("cpu-host")
+    model = build(get_smoke(config))
+    out: list[Row] = []
+    walls: dict[str, float] = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        store = TuneStore(f"{tmp}/tune.json")
+        # populate the table at the bench shape, then freeze: the timed
+        # steps below never pay (or hide) measurement cost
+        search = dsp.search_sites(config, seq=seq, batch=batch, store=store)
+        for fusion in ("off", "static", "auto"):
+            run = RunConfig(amp="O1", fusion=fusion)
+            phases = build_phase_args(model, run, seq=seq, batch=batch)
+            with dsp.dispatch_scope(store=store, mode="frozen"):
+                ms = collect_phases(phases, machine=machine, iters=iters,
+                                    warmup=warmup, matmul_class="bf16")
+            walls[fusion] = sum(m.wall_s for m in ms.values())
+        table = dsp.dispatch_table(store)
+
+    out.append(("dispatch_bench/step_off", walls["off"] * 1e6, ""))
+    out.append(("dispatch_bench/step_static", walls["static"] * 1e6,
+                f"vs_off={walls['off']/walls['static']:.2f}x"))
+    out.append(("dispatch_bench/step_measured", walls["auto"] * 1e6,
+                f"vs_off={walls['off']/walls['auto']:.2f}x;"
+                f"vs_static={walls['static']/walls['auto']:.2f}x;"
+                f"sites={search.n_sites};tolerance={STEP_TOLERANCE}"))
+    if walls["auto"] > walls["static"] * STEP_TOLERANCE:
+        raise AssertionError(
+            f"measured-dispatch step {walls['auto']*1e6:.1f}us exceeds "
+            f"static fused step {walls['static']*1e6:.1f}us by more than "
+            f"the {STEP_TOLERANCE}x noise tolerance — routing is picking "
+            "losers")
+
+    bad = []
+    for rec in table:
+        win = rec.fused_wall_s if rec.impl == "fused" else rec.ref_wall_s
+        lose = rec.ref_wall_s if rec.impl == "fused" else rec.fused_wall_s
+        if win > lose:
+            bad.append(f"{rec.op}[{rec.key}]: {rec.impl} "
+                       f"{win*1e6:.1f}us > {lose*1e6:.1f}us")
+    n_fused = sum(1 for r in table if r.impl == "fused")
+    out.append(("dispatch_bench/table_gate", 0.0,
+                f"winners={len(table)};fused={n_fused};"
+                f"reference={len(table) - n_fused};violations={len(bad)}"))
+    if bad:
+        raise AssertionError(
+            "stored dispatch winner(s) slower than the impl they "
+            "replaced: " + "; ".join(bad))
+    return out
+
+
+def main(verbose: bool = False) -> list[Row]:
+    return bench_rows()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main(verbose=True))

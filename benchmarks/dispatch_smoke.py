@@ -1,0 +1,86 @@
+"""Dispatch-table smoke: search twice, second pass must be 100% cached.
+
+The measurement-driven dispatch loop (``repro.tune.dispatch``,
+docs/DESIGN.md §16) promises that measurement happens *once* per
+(site, machine): the first ``tune dispatch search`` over a workspace
+times every fused-vs-reference site the train-step trace encounters and
+persists the winners; every later search — and every ``fusion="auto"``
+trace — routes by zero-cost store lookups.  This suite is that promise
+as a CI gate:
+
+* pass 1 over a fresh store: every site measured, table persisted;
+* pass 2 over the *same* store: **zero re-timings** (``n_measured == 0``)
+  — anything else raises → suite ERROR → non-zero driver exit.
+
+The store lands at ``$REPRO_DISPATCH_STORE`` when set (CI sets it and
+uploads the resulting table as an artifact), else a throwaway tempdir.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.dispatch_smoke
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import Row
+
+SMOKE_CONFIG = "minitron-4b"
+SMOKE_SEQ = 16
+SMOKE_BATCH = 2
+
+STORE_ENV = "REPRO_DISPATCH_STORE"
+
+
+def smoke_rows(config: str = SMOKE_CONFIG, seq: int = SMOKE_SEQ,
+               batch: int = SMOKE_BATCH) -> list[Row]:
+    from repro.tune import dispatch as dsp
+    from repro.tune.store import TuneStore
+
+    out: list[Row] = []
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = os.environ.get(STORE_ENV) or f"{tmp}/tune.json"
+        store = TuneStore(store_path)
+
+        t0 = time.perf_counter()
+        first = dsp.search_sites(config, seq=seq, batch=batch, store=store)
+        wall1 = (time.perf_counter() - t0) * 1e6
+        out.append(("dispatch_smoke/search_first", wall1,
+                    f"sites={first.n_sites};measured={first.n_measured};"
+                    f"hits={first.n_hit}"))
+        if first.n_sites == 0:
+            raise AssertionError(
+                f"dispatch search over {config} encountered no sites — "
+                "the fusion='auto' trace is not reaching the routers")
+
+        t0 = time.perf_counter()
+        second = dsp.search_sites(config, seq=seq, batch=batch, store=store)
+        wall2 = (time.perf_counter() - t0) * 1e6
+        out.append(("dispatch_smoke/search_second", wall2,
+                    f"sites={second.n_sites};measured={second.n_measured};"
+                    f"hits={second.n_hit};cached={second.all_cached}"))
+        if second.n_measured != 0:
+            raise AssertionError(
+                f"second dispatch search re-timed {second.n_measured} "
+                f"site(s) — the store must make it a 100% hit "
+                f"({second.n_hit} hit(s) of {second.n_sites} site(s))")
+
+        table = dsp.dispatch_table(store)
+        n_fused = sum(1 for r in table if r.impl == "fused")
+        out.append(("dispatch_smoke/table", 0.0,
+                    f"winners={len(table)};fused={n_fused};"
+                    f"reference={len(table) - n_fused};"
+                    f"store={store_path}"))
+    return out
+
+
+def main(verbose: bool = False) -> list[Row]:
+    return smoke_rows()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main(verbose=True))

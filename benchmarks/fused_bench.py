@@ -6,14 +6,19 @@ Three sections, all on the same LM config the zero-AI census diagnoses:
   it replaces (norm+residual, SwiGLU epilogue, AdamW leaf update) at a
   mid-size shape: the per-kernel before/after pair;
 * **census gate** — the LM train-step launch census under
-  ``fusion="off"`` vs ``"auto"``; *raises* (→ suite ERROR → non-zero
+  ``fusion="off"`` vs ``"static"``; *raises* (→ suite ERROR → non-zero
   driver exit) unless the fused step launches strictly fewer kernels and
   cuts zero-AI launches by ≥ the gate threshold — the CI ``fused_smoke``
   step is exactly this suite;
-* **trace** — a measured reference-vs-fused trace of the same config
-  (same phases, same machine model): wall per phase plus the achieved
+* **trace** — a measured trace of the same config in all three routing
+  modes (``off`` / ``static`` / measured-dispatch ``auto``, row tags
+  ``reference`` / ``fused`` / ``measured`` so ``python -m repro trend``
+  tracks the routing win per host): wall per phase plus the achieved
   fraction of each memory level's bandwidth (HBM and VMEM), the
-  hierarchical-roofline before/after the paper's workflow ends on.
+  hierarchical-roofline before/after the paper's workflow ends on.  The
+  ``auto`` trace runs against a dispatch table populated by a
+  ``search_sites`` pass at the trace shape, then frozen — measurement
+  cost never leaks into the timed step.
 """
 
 from __future__ import annotations
@@ -135,28 +140,60 @@ def _level_fractions(m, machine) -> str:
             f"roof={m.pct_of_roofline:.3f}")
 
 
-def trace_rows(config: str = LM_CONFIG, iters: int = 3,
-               warmup: int = 1) -> list[Row]:
+_TRACE_TAGS = {"off": "reference", "static": "fused", "auto": "measured"}
+
+
+def trace_rows(config: str = LM_CONFIG, iters: int = 3, warmup: int = 1,
+               store=None) -> list[Row]:
+    """off / static / measured-dispatch walls of the same train step.
+
+    Row names: ``trace_{phase}_{reference|fused|measured}`` plus
+    ``trace_step`` (the static-fusion wall, the series PR 4 started) and
+    ``trace_step_measured`` (the dispatch-routed wall with its speedup
+    over both off and static).  ``store`` is the tune store holding the
+    dispatch table (default: a throwaway — callers that want the table
+    persisted, like ``dispatch_smoke``, pass their own).
+    """
+    import contextlib
+    import tempfile
+
     from repro.trace.cli import build_phase_args
     from repro.trace.collector import collect_phases
+    from repro.tune import dispatch as dsp
 
     machine = get_machine("cpu-host")
     model = build(get_smoke(config))
     out: list[Row] = []
     walls: dict[str, float] = {}
-    for fusion in ("off", "auto"):
-        run = RunConfig(amp="O1", fusion=fusion)
-        phases = build_phase_args(model, run, seq=TRACE_SEQ, batch=LM_BATCH)
-        ms = collect_phases(phases, machine=machine, iters=iters,
-                            warmup=warmup, matmul_class="bf16")
-        tag = "reference" if fusion == "off" else "fused"
-        for phase, m in ms.items():
-            out.append((f"fused_bench/trace_{phase}_{tag}", m.wall_s * 1e6,
-                        _level_fractions(m, machine)))
-        walls[fusion] = sum(m.wall_s for m in ms.values())
-    out.append(("fused_bench/trace_step", walls["auto"] * 1e6,
+    with contextlib.ExitStack() as stack:
+        if store is None:
+            tmp = stack.enter_context(tempfile.TemporaryDirectory())
+            store = f"{tmp}/tune.json"
+        # populate the dispatch table at the trace shape first, so the
+        # timed auto trace below routes by table hits only (frozen mode
+        # would raise on any site the search pass missed)
+        dsp.search_sites(config, seq=TRACE_SEQ, batch=LM_BATCH,
+                         store=store, smoke=True)
+        for fusion in ("off", "static", "auto"):
+            run = RunConfig(amp="O1", fusion=fusion)
+            phases = build_phase_args(model, run, seq=TRACE_SEQ,
+                                      batch=LM_BATCH)
+            with dsp.dispatch_scope(store=store, mode="frozen"):
+                ms = collect_phases(phases, machine=machine, iters=iters,
+                                    warmup=warmup, matmul_class="bf16")
+            tag = _TRACE_TAGS[fusion]
+            for phase, m in ms.items():
+                out.append((f"fused_bench/trace_{phase}_{tag}",
+                            m.wall_s * 1e6, _level_fractions(m, machine)))
+            walls[fusion] = sum(m.wall_s for m in ms.values())
+    out.append(("fused_bench/trace_step", walls["static"] * 1e6,
                 f"ref={walls['off']*1e6:.1f}us;"
-                f"speedup={walls['off']/walls['auto']:.2f}x"))
+                f"speedup={walls['off']/walls['static']:.2f}x"))
+    out.append(("fused_bench/trace_step_measured", walls["auto"] * 1e6,
+                f"ref={walls['off']*1e6:.1f}us;"
+                f"static={walls['static']*1e6:.1f}us;"
+                f"speedup_vs_ref={walls['off']/walls['auto']:.2f}x;"
+                f"speedup_vs_static={walls['static']/walls['auto']:.2f}x"))
     return out
 
 

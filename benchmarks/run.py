@@ -35,6 +35,8 @@ SUITES = (
     "sweep_smoke",       # repro.sweep: campaign→store→report loop + cache
     "tune_smoke",        # repro.tune: search→store→hit loop
     "fused_bench",       # repro.kernels.fused: census gate + before/after
+    "dispatch_smoke",    # repro.tune.dispatch: search twice → zero re-timings
+    "dispatch_bench",    # repro.tune.dispatch: measured-vs-static step gates
     "session_smoke",     # repro.session: whole workflow, one workspace root
     "decode_batch_study",  # beyond-paper: decode tok/s vs global batch
     "obs_smoke",         # repro.obs: merge→trend→advise fleet loop

@@ -35,8 +35,11 @@ LM_CONFIG = "glm4-9b"
 LM_SEQ = 64
 LM_BATCH = 4
 
-FUSION_MODES = ("off", "auto")
-_MODE_TAG = {"off": "reference", "auto": "fused"}
+# "static" (not "auto"): the census counts what full static fusion removes;
+# measured dispatch would consult/populate the tune store mid-trace.  The
+# row tag stays "fused" so `repro trend` series are continuous.
+FUSION_MODES = ("off", "static")
+_MODE_TAG = {"off": "reference", "static": "fused"}
 
 
 def deepcam_census(run: RunConfig, census_by: dict) -> list[Row]:
@@ -74,7 +77,7 @@ def deepcam_census(run: RunConfig, census_by: dict) -> list[Row]:
 def lm_phase_census(config: str = LM_CONFIG, seq: int = LM_SEQ,
                     batch: int = LM_BATCH
                     ) -> dict[str, dict[str, tuple[int, int]]]:
-    """{"off/fwd": census, ..., "auto/opt": census} for one LM config.
+    """{"off/fwd": census, ..., "static/opt": census} for one LM config.
 
     Phases are the train-step triple (fwd / bwd / opt) from
     ``repro.trace.cli.build_phase_args`` — the same programs a measured
@@ -109,7 +112,7 @@ def lm_step_summary(census_by: dict) -> dict[str, float]:
     """Train-step totals + the zero-AI reduction fraction — the one
     definition both the census rows and the ``fused_bench`` gate use."""
     z_ref, n_ref = lm_totals(census_by, "off")
-    z_fus, n_fus = lm_totals(census_by, "auto")
+    z_fus, n_fus = lm_totals(census_by, "static")
     return {"zero_ref": z_ref, "launches_ref": n_ref,
             "zero_fused": z_fus, "launches_fused": n_fus,
             "zero_reduction": 1.0 - z_fus / z_ref if z_ref else 0.0}
@@ -131,7 +134,7 @@ def lm_census_rows(config: str = LM_CONFIG, seq: int = LM_SEQ,
     # per-phase delta + the train-step total the CI gate checks
     for phase in ("fwd", "bwd", "opt"):
         zr = census_by[f"off/{phase}"]["zero-AI"][0]
-        zf = census_by[f"auto/{phase}"]["zero-AI"][0]
+        zf = census_by[f"static/{phase}"]["zero-AI"][0]
         rows.append((f"zero_ai/lm_{phase}_delta", 0.0, f"{zr}vs{zf}"))
     s = lm_step_summary(census_by)
     rows.append(("zero_ai/lm_step_reference_vs_fused", 0.0,

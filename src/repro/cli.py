@@ -54,6 +54,7 @@ import os
 import sys
 from typing import Sequence
 
+from repro.configs.base import FUSION_MODES
 from repro.session.workspace import WORKSPACE_ENV, Workspace
 
 PROG = "python -m repro"
@@ -281,7 +282,7 @@ def build_parser() -> argparse.ArgumentParser:
     pr.add_argument("--seq", type=int, default=32)
     pr.add_argument("--batch", type=int, default=4)
     pr.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
-    pr.add_argument("--fusion", default="off", choices=("off", "auto"))
+    pr.add_argument("--fusion", default="off", choices=FUSION_MODES)
     pr.add_argument("--full", action="store_true",
                     help="full config instead of the smoke variant")
     pr.add_argument("--measure", action="store_true",
@@ -336,7 +337,7 @@ def build_parser() -> argparse.ArgumentParser:
     sv.add_argument("--page-size", type=int, default=16,
                     help="KV-cache page size in tokens (default 16)")
     sv.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
-    sv.add_argument("--fusion", default="off", choices=("off", "auto"))
+    sv.add_argument("--fusion", default="off", choices=FUSION_MODES)
     sv.add_argument("--full", action="store_true",
                     help="full config instead of the smoke variant")
     sv.add_argument("--max-ticks", type=int, default=4096,

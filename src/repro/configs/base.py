@@ -15,6 +15,14 @@ from typing import Literal
 Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio",
                  "cnn"]
 
+#: valid values of :attr:`RunConfig.fusion` — the one list every CLI
+#: ``--fusion`` choice and sweep-axis validation imports.  ``off`` =
+#: reference lowerings; ``static`` = the PR 4 behaviour (eligibility
+#: predicates alone route to the fused kernels); ``auto`` = measured-best
+#: per call site through the dispatch table (``repro.tune.dispatch``);
+#: ``measured`` = explicit alias of ``auto``.
+FUSION_MODES = ("off", "static", "auto", "measured")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -174,17 +182,28 @@ class RunConfig:
     optimizer: str = "adamw"
     # deepcam lowering variant (paper's TF-vs-PyTorch comparison)
     impl: str = "reference"
-    # fused-kernel routing (repro.kernels.fused, docs/DESIGN.md §12):
-    # "off" = reference lowerings everywhere; "auto" = route the census's
-    # memory-bound hot chains (norm+residual+cast, swiglu epilogue, AdamW
-    # leaf update, embedding backward) through the fused Pallas kernels,
-    # falling back to reference wherever a shape/dtype is ineligible
+    # fused-kernel routing (repro.kernels.fused, docs/DESIGN.md §12/§16):
+    # "off" = reference lowerings everywhere; "static" = route the
+    # census's memory-bound hot chains (norm+residual+cast, swiglu
+    # epilogue, AdamW leaf update, embedding backward) through the fused
+    # Pallas kernels whenever the eligibility predicates allow; "auto"
+    # (alias "measured") = measured-best per call site — eligibility
+    # stays a hard correctness gate, and the fused-vs-reference choice
+    # comes from the dispatch table (repro.tune.dispatch)
     fusion: str = "off"
     # MoE combine lowering: "default" (XLA masked-gather → model-axis
     # all-reduce), "reshard" (explicitly bring the expert buffer back to
     # batch sharding in bf16, gather locally), "a2a" (shard the sorted-token
     # dim over model so dispatch/combine move only expert-local slices)
     moe_combine: str = "default"
+
+    def __post_init__(self):
+        # an unknown fusion string used to silently mean "off" (the ops
+        # predicate only checked == "auto"); fail loudly instead
+        if self.fusion not in FUSION_MODES:
+            raise ValueError(
+                f"unknown fusion mode {self.fusion!r}; valid: "
+                f"{', '.join(FUSION_MODES)}")
 
     @property
     def param_dtype(self):

@@ -1,11 +1,16 @@
 """Model-facing routing for the fused kernels: eligibility + custom VJPs.
 
-``RunConfig.fusion = "auto"`` routes the memory-bound chains the zero-AI
-census ranks hottest through the Pallas kernels in this package; anything
-the kernels cannot take (exotic dtypes, degenerate shapes, oversized
-rows) silently falls back to the reference implementation with identical
-outputs — the eligibility predicates here are the single source of that
-decision, and ``tests/test_fused.py`` pins the fallback behaviour.
+``RunConfig.fusion`` routes the memory-bound chains the zero-AI census
+ranks hottest through the Pallas kernels in this package.  Eligibility
+predicates are hard *correctness* gates: anything the kernels cannot
+take (exotic dtypes, degenerate shapes, oversized rows) silently falls
+back to the reference implementation with identical outputs, and
+``tests/test_fused.py`` pins the fallback behaviour.  Under
+``fusion="static"`` eligibility alone routes to the kernel; under
+``fusion="auto"`` (alias ``"measured"``) each eligible site additionally
+consults the measured dispatch table (``repro.tune.dispatch``,
+docs/DESIGN.md §16) so only sites whose fused timing actually beat the
+reference run fused — call sites ask the ``use_*`` helpers below.
 
 ``pallas_call`` has no autodiff rule, so every forward that sits inside
 ``jax.grad`` is wrapped in a ``custom_vjp`` whose backward recomputes the
@@ -48,9 +53,83 @@ ONEHOT_BYTES_MAX = 2 ** 28
 FLASH_MIN_BLOCK = 16
 
 
+#: modes that route through this package at all / that consult the
+#: measured dispatch table (docs/DESIGN.md §16) instead of trusting the
+#: eligibility predicates as performance guesses
+_ENABLED_MODES = ("static", "auto", "measured")
+_MEASURED_MODES = ("auto", "measured")
+
+
 def fusion_enabled(run) -> bool:
     """The routing predicate every call site guards on."""
-    return run is not None and getattr(run, "fusion", "off") == "auto"
+    return run is not None and getattr(run, "fusion", "off") in _ENABLED_MODES
+
+
+def fusion_measured(run) -> bool:
+    """Does this run route by measured winners (``auto``/``measured``)
+    rather than statically trusting eligibility (``static``)?"""
+    return (run is not None
+            and getattr(run, "fusion", "off") in _MEASURED_MODES)
+
+
+def _dispatch_fused(run, key) -> bool:
+    """Final per-site verdict once eligibility already passed: static
+    mode short-circuits to the kernel; measured mode asks the dispatch
+    table (measuring / raising on a miss per ``REPRO_DISPATCH``)."""
+    if not fusion_measured(run):
+        return True
+    from repro.tune import dispatch as dsp
+    return dsp.decide(key) == "fused"
+
+
+# --------------------------------------------------------------------------
+# use_* — the one question each call site asks: eligibility (hard
+# correctness gate) AND dispatch (measured performance verdict)
+# --------------------------------------------------------------------------
+
+def use_norm(run, x, scale, bias=None, *, kind: str = "rmsnorm",
+             out_dtype=None) -> bool:
+    if not norm_eligible(x, scale, bias):
+        return False
+    from repro.tune import dispatch as dsp
+    return _dispatch_fused(run, dsp.norm_key(
+        x, scale, bias, kind=kind, out_dtype=out_dtype))
+
+
+def use_swiglu(run, gate, up, *, act: str = "silu",
+               out_dtype=None) -> bool:
+    if not swiglu_eligible(gate, up):
+        return False
+    from repro.tune import dispatch as dsp
+    return _dispatch_fused(run, dsp.swiglu_key(
+        gate, up, act=act, out_dtype=out_dtype))
+
+
+def use_adamw(run, g, m, v, p) -> bool:
+    if not adamw_eligible(g, m, v, p):
+        return False
+    from repro.tune import dispatch as dsp
+    return _dispatch_fused(run, dsp.adamw_key(p, m))
+
+
+def use_embed(run, table, tokens, compute_dtype) -> bool:
+    if not embed_grad_eligible(tokens, int(table.shape[0])):
+        return False
+    from repro.tune import dispatch as dsp
+    return _dispatch_fused(run, dsp.embed_key(table, tokens, compute_dtype))
+
+
+def use_flash_from_chunked(run, q_shape, k_shape, dtype, *, causal: bool,
+                           has_memory: bool, has_cache: bool,
+                           softmax_f32: bool, chunk: int) -> bool:
+    sq, sk_ = int(q_shape[1]), int(k_shape[1])
+    if not flash_from_chunked_eligible(
+            sq, sk_, causal=causal, has_memory=has_memory,
+            has_cache=has_cache, softmax_f32=softmax_f32):
+        return False
+    from repro.tune import dispatch as dsp
+    return _dispatch_fused(run, dsp.flash_key(q_shape, k_shape, dtype,
+                                              chunk=chunk))
 
 
 # --------------------------------------------------------------------------

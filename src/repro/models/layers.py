@@ -23,11 +23,13 @@ Params = Any
 # Norms
 # --------------------------------------------------------------------------
 #
-# Every norm takes an optional ``run``: under ``run.fusion == "auto"`` the
-# upcast → statistics → scale → downcast chain routes through the fused
-# Pallas kernels (repro.kernels.fused) instead of lowering as separate
+# Every norm takes an optional ``run``: with fusion enabled the upcast →
+# statistics → scale → downcast chain routes through the fused Pallas
+# kernels (repro.kernels.fused) instead of lowering as separate
 # convert/reduce/multiply launches; ineligible shapes/dtypes silently fall
-# back to the reference math below (same outputs, enforced by tests).
+# back to the reference math below (same outputs, enforced by tests), and
+# under ``fusion="auto"`` the fops.use_* helpers additionally consult the
+# measured dispatch table (repro.tune.dispatch) per call site.
 
 def _fused(run):
     from repro.kernels.fused import ops as fops
@@ -41,7 +43,7 @@ def rmsnorm_spec(d: int) -> Params:
 def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-5,
                   run: RunConfig | None = None) -> jax.Array:
     fops = _fused(run)
-    if fops is not None and fops.norm_eligible(x, p["scale"]):
+    if fops is not None and fops.use_norm(run, x, p["scale"]):
         return fops.rmsnorm(x, p["scale"], eps=eps)
     dt = x.dtype
     xf = x.astype(jnp.float32)
@@ -61,7 +63,7 @@ def rmsnorm_residual_apply(p: Params, x: jax.Array, h: jax.Array,
     """
     fops = _fused(run)
     if fops is not None and x.shape == h.shape \
-            and fops.norm_eligible(x, p["scale"]):
+            and fops.use_norm(run, x, p["scale"], kind="rmsnorm_residual"):
         return fops.rmsnorm_residual(x, h, p["scale"], eps=eps)
     r = x + h
     return r, rmsnorm_apply(p, r, eps)
@@ -75,7 +77,8 @@ def layernorm_spec(d: int) -> Params:
 def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5,
                     run: RunConfig | None = None) -> jax.Array:
     fops = _fused(run)
-    if fops is not None and fops.norm_eligible(x, p["scale"], p["bias"]):
+    if fops is not None and fops.use_norm(run, x, p["scale"], p["bias"],
+                                          kind="layernorm"):
         return fops.layernorm(x, p["scale"], p["bias"], eps=eps)
     dt = x.dtype
     xf = x.astype(jnp.float32)
@@ -256,9 +259,10 @@ def _attention_apply(p, x, cfg, run, positions=None, kv_cache=None,
             # softmax stats, non-degenerate blocks) — same score math, the
             # (chunk x Sk) matrices stay in VMEM instead of rematerializing
             fops = _fused(run)
-            if fops is not None and fops.flash_from_chunked_eligible(
-                    S, k.shape[1], causal=causal, has_memory=memory is not None,
-                    has_cache=False, softmax_f32=run.softmax_f32):
+            if fops is not None and fops.use_flash_from_chunked(
+                    run, qg.shape, k.shape, qg.dtype, causal=causal,
+                    has_memory=memory is not None, has_cache=False,
+                    softmax_f32=run.softmax_f32, chunk=run.attn_chunk):
                 from repro.kernels.flash_attention import ops as fa_ops
                 out = fa_ops.flash_attention_gqa(qg, k, v)
             else:
@@ -310,9 +314,9 @@ def _mlp_apply(p, x, cfg, run):
         g = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cd))
         u = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(cd))
         fops = _fused(run)
-        if fops is not None and fops.swiglu_eligible(g, u):
-            h = fops.swiglu(g, u,
-                            act="silu" if cfg.act == "swiglu" else "gelu")
+        act_name = "silu" if cfg.act == "swiglu" else "gelu"
+        if fops is not None and fops.use_swiglu(run, g, u, act=act_name):
+            h = fops.swiglu(g, u, act=act_name)
         else:
             act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
             h = act * u
@@ -338,8 +342,8 @@ def embed_spec(cfg: ModelConfig) -> Params:
 def embed_apply(p: Params, tokens: jax.Array, run: RunConfig) -> jax.Array:
     from repro.distributed.sharding import constrain
     fops = _fused(run)
-    if fops is not None and fops.embed_grad_eligible(tokens,
-                                                     p["tokens"].shape[0]):
+    if fops is not None and fops.use_embed(run, p["tokens"], tokens,
+                                           run.compute_dtype):
         # same gather forward; the backward becomes one onehot^T @ g
         # matmul instead of XLA-CPU's per-row scatter loop — the census's
         # single largest zero-AI term (docs/DESIGN.md §12)

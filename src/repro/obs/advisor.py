@@ -18,12 +18,18 @@ launch_overhead     measured wall past the serial bound with a high
                     per phase) → ``--fusion auto`` (repro.kernels.fused)
 scatter_heavy       scatter launches in a backward phase → fusion=auto
                     routes the scatter-free embedding backward
-tune_mismatch       record measured under kernel configs that diverge
-                    from the TuneStore's current best (stale_default /
-                    vanished_tuned) → re-run / ``repro tune search``
+tune_mismatch       record measured under kernel configs or dispatch
+                    winners that diverge from the TuneStore's current
+                    state (stale_default / vanished_tuned /
+                    dispatch_changed / dispatch_vanished) → re-run /
+                    ``repro tune search`` / ``repro tune dispatch``
 untuned             measured with every kernel at its default while the
                     tune store holds no winners for this machine →
                     ``repro tune search``
+dispatch_stale      record whose ``meta.dispatch_table`` winners were
+                    measured under a different git SHA or jax version
+                    than the record itself → ``repro tune dispatch
+                    search --force`` (tune-winner decay, first step)
 level_pinned        one memory level's streaming time accounts for most
                     of the measured wall → the phase is pinned under
                     that bandwidth bound; raise arithmetic intensity
@@ -41,7 +47,7 @@ from typing import Any, Iterable
 
 #: rule names in documentation order (docs/DESIGN.md §14 table)
 RULES = ("launch_overhead", "scatter_heavy", "tune_mismatch", "untuned",
-         "level_pinned")
+         "level_pinned", "dispatch_stale")
 
 #: zero-AI launch share past which launch overhead is called dominant
 ZERO_AI_SHARE = 0.15
@@ -171,27 +177,43 @@ def rule_tune_mismatch(records: Iterable[Any], tune_store=None,
                        machine: str = "cpu-host") -> list[Finding]:
     from repro.sweep.aggregate import tune_mismatch_rows
 
+    kinds = {
+        "stale_default": (
+            0.6,
+            "default {k} config, but the tune store now holds a tuned "
+            "winner",
+            "re-run the measurement (`python -m repro record` / "
+            "`repro sweep run`) so wall times reflect the store's "
+            "current best configs"),
+        "vanished_tuned": (
+            0.8,
+            "tuned {k} config(s) that the tune store no longer has",
+            "re-run `python -m repro tune search` to restore the winners "
+            "this record was measured under"),
+        "dispatch_changed": (
+            0.6,
+            "a {k} dispatch winner the store has since overturned",
+            "re-run the measurement so routing reflects the current "
+            "dispatch winners (`python -m repro record --fusion auto`)"),
+        "dispatch_vanished": (
+            0.8,
+            "a {k} dispatch entry the tune store no longer holds",
+            "re-run `python -m repro tune dispatch search` to restore "
+            "the routing this record was measured under"),
+    }
     out: list[Finding] = []
     for row in tune_mismatch_rows(list(records), tune_store,
                                   machine=machine):
-        stale = row["kind"] == "stale_default"
+        severity, what, fix = kinds[row["kind"]]
         out.append(Finding(
             rule="tune_mismatch",
-            severity=0.6 if stale else 0.8,
+            severity=severity,
             subject=f"{row['label']}/{row['kernel']}",
             evidence=[
                 f"run {row['run_id']}: measured with "
-                + (f"default {row['kernel']} config, but the tune store "
-                   "now holds a tuned winner" if stale else
-                   f"tuned {row['kernel']} config(s) that the tune store "
-                   "no longer has"),
+                + what.format(k=row["kernel"]),
             ],
-            remediation="re-run the measurement (`python -m repro record` "
-                        "/ `repro sweep run`) so wall times reflect the "
-                        "store's current best configs"
-            if stale else
-            "re-run `python -m repro tune search` to restore the winners "
-            "this record was measured under"))
+            remediation=fix))
     return out
 
 
@@ -224,6 +246,56 @@ def rule_untuned(records: Iterable[Any], tune_store=None,
                         "autotuner's wins (triad 6.8x, GEMM 5.4x on the "
                         "reference host) persist per machine key"))
         break                         # one finding, not one per record
+    return out
+
+
+def rule_dispatch_stale(records: Iterable[Any]) -> list[Finding]:
+    """Dispatch winners measured under different code/toolchain than the
+    record that ran them (the first step of tune-winner decay).
+
+    Each stamped ``meta.dispatch_table`` entry carries the git SHA and
+    jax version the fused-vs-reference timing ran under; when they
+    diverge from the record's own provenance, the routing decision
+    predates the code that produced the wall times — the winner may have
+    flipped in between.
+    """
+    out: list[Finding] = []
+    for rec in records:
+        dtab = rec.meta.get("dispatch_table")
+        if not isinstance(dtab, dict) or not dtab:
+            continue
+        rec_sha = str(rec.git_sha or "unknown")
+        rec_jax = (rec.host.get("jax", "unknown")
+                   if isinstance(rec.host, dict) else "unknown")
+        stale: list[str] = []
+        for site, entry in sorted(dtab.items()):
+            if not isinstance(entry, dict):
+                continue
+            e_sha = str(entry.get("git_sha", "unknown"))
+            e_jax = str(entry.get("jax", "unknown"))
+            drift = []
+            if "unknown" not in (e_sha, rec_sha) and e_sha != rec_sha:
+                drift.append(f"git {e_sha[:12]} vs {rec_sha[:12]}")
+            if "unknown" not in (e_jax, rec_jax) and e_jax != rec_jax:
+                drift.append(f"jax {e_jax} vs {rec_jax}")
+            if drift:
+                stale.append(f"{entry.get('op', site)} "
+                             f"({', '.join(drift)})")
+        if not stale:
+            continue
+        out.append(Finding(
+            rule="dispatch_stale",
+            severity=min(1.0, 0.4 + 0.1 * len(stale)),
+            subject=rec.config,
+            evidence=[
+                f"run {rec.run_id}: {len(stale)} dispatch winner(s) "
+                "measured under different provenance than the record: "
+                + "; ".join(stale[:4])
+                + ("" if len(stale) <= 4 else f"; +{len(stale) - 4} more"),
+            ],
+            remediation="re-measure the dispatch table on this code "
+                        "(`python -m repro tune dispatch search --force`) "
+                        "before trusting the routing these walls ran with"))
     return out
 
 
@@ -274,13 +346,15 @@ def advise(workspace: Any, config: str | None = None,
     sweep_recs = workspace.sweep_store.records(config)
     newest = _newest_per_key(trace_recs)
     stamped = [r for r in trace_recs + sweep_recs
-               if isinstance(r.meta.get("kernel_configs"), dict)]
+               if isinstance(r.meta.get("kernel_configs"), dict)
+               or isinstance(r.meta.get("dispatch_table"), dict)]
     tune_store = workspace.tune_store
     findings = (rule_launch_overhead(newest)
                 + rule_scatter_heavy(newest)
                 + rule_tune_mismatch(stamped, tune_store, machine=machine)
                 + rule_untuned(stamped, tune_store, machine=machine)
-                + rule_level_pinned(newest))
+                + rule_level_pinned(newest)
+                + rule_dispatch_stale(stamped))
     findings.sort(key=lambda f: (-f.severity, f.rule, f.subject))
     return findings
 

@@ -13,7 +13,9 @@ Merge identity per store:
   time (uuid); records with no run_id fall back to a content hash.
 * tune (JSON): the store key ``kernel|backend|shape|dtype|machine`` —
   the machine key means two hosts' winners coexist; a same-key conflict
-  resolves to the newer ``timestamp`` (and is reported).
+  resolves to the newer ``timestamp`` (and is reported).  The store's
+  ``dispatch`` namespace (site-keyed fused-vs-reference winners,
+  docs/DESIGN.md §16) merges under the same rule.
 * bench: the ``BENCH_<utc timestamp>.json`` file name.
 
 The local store is never corrupted: remote corrupt lines, records from a
@@ -168,39 +170,56 @@ def merge_tune(local_path: str, remote_path: str) -> MergeReport:
                  f"{SCHEMA_VERSION} (newer writer) — skipped")
         return rep
     remote = doc.get("records")
-    if not isinstance(remote, dict):
+    remote_dispatch = doc.get("dispatch")
+    if not isinstance(remote, dict) and not isinstance(remote_dispatch,
+                                                       dict):
         rep.note("remote tune store holds no records")
         return rep
 
     store = TuneStore(local_path)
-    local = dict(store._load())
-    additions: dict[str, dict] = {}
-    for key, d in sorted(remote.items()):
-        if not isinstance(d, dict):
-            rep.n_skipped += 1
-            rep.note(f"tune key {key!r}: non-record value skipped")
-            continue
-        if d.get("schema_version", 0) > SCHEMA_VERSION:
-            rep.n_skipped += 1
-            rep.note(f"tune key {key!r}: newer-schema record skipped")
-            continue
-        mine = local.get(key)
-        if mine is None:
-            additions[key] = d
-        elif mine == d:
-            rep.n_dup += 1
-        else:
-            rep.n_conflict += 1
-            if float(d.get("timestamp", 0)) > float(
-                    mine.get("timestamp", 0)):
+
+    def _union(remote_ns: dict, local_ns: dict, what: str) -> dict:
+        """Same-key union: identical = dup, different = newer timestamp
+        wins (the one merge rule both namespaces share)."""
+        additions: dict[str, dict] = {}
+        for key, d in sorted(remote_ns.items()):
+            if not isinstance(d, dict):
+                rep.n_skipped += 1
+                rep.note(f"{what} key {key!r}: non-record value skipped")
+                continue
+            if d.get("schema_version", 0) > SCHEMA_VERSION:
+                rep.n_skipped += 1
+                rep.note(f"{what} key {key!r}: newer-schema record "
+                         "skipped")
+                continue
+            mine = local_ns.get(key)
+            if mine is None:
                 additions[key] = d
-                rep.note(f"tune key {key!r}: remote winner is newer — "
-                         "replaced local")
+            elif mine == d:
+                rep.n_dup += 1
             else:
-                rep.note(f"tune key {key!r}: local winner is newer — kept")
-    if additions:
-        store.put_many(additions)
-        rep.n_added = len(additions)
+                rep.n_conflict += 1
+                if float(d.get("timestamp", 0)) > float(
+                        mine.get("timestamp", 0)):
+                    additions[key] = d
+                    rep.note(f"{what} key {key!r}: remote winner is "
+                             "newer — replaced local")
+                else:
+                    rep.note(f"{what} key {key!r}: local winner is "
+                             "newer — kept")
+        return additions
+
+    if isinstance(remote, dict):
+        additions = _union(remote, dict(store._load()), "tune")
+        if additions:
+            store.put_many(additions)
+            rep.n_added += len(additions)
+    if isinstance(remote_dispatch, dict):
+        additions = _union(remote_dispatch, dict(store._load_dispatch()),
+                           "dispatch")
+        if additions:
+            store.put_dispatch_many(additions)
+            rep.n_added += len(additions)
     return rep
 
 

@@ -199,21 +199,26 @@ class Engine:
 
     def _build_prefill_first(self):
         """Start-of-prompt chunk: causal self-attention over the chunk
-        only — the flash-routable shape.  Under ``fusion="auto"`` an
-        eligible chunk routes to the flash kernel (the PR 4 chunked →
-        flash seam); otherwise the masked reference sdpa runs."""
+        only — the flash-routable shape.  With fusion enabled an eligible
+        chunk routes to the flash kernel (the PR 4 chunked → flash seam;
+        ``fusion="auto"`` additionally asks the measured dispatch table);
+        otherwise the masked reference sdpa runs."""
         from repro.core.profiler import compile_fn
         from repro.kernels.fused import ops as fops
         from repro.models import layers as L
 
         C = self.chunk
-        run = self.run
+        cfg, run = self.cfg, self.run
         cd = run.compute_dtype
         sd = jnp.float32 if run.softmax_f32 else cd
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        G = cfg.n_heads // K
         use_flash = (fops.fusion_enabled(run)
-                     and fops.flash_from_chunked_eligible(
-                         C, C, causal=True, has_memory=False,
-                         has_cache=False, softmax_f32=run.softmax_f32))
+                     and fops.use_flash_from_chunked(
+                         run, (1, C, K, G, hd), (1, C, K, hd), cd,
+                         causal=True, has_memory=False, has_cache=False,
+                         softmax_f32=run.softmax_f32,
+                         chunk=run.attn_chunk))
         self.prefill_first_flash = use_flash
 
         def fn(params, chunk, valid, k_pool, v_pool, wpage, woff):

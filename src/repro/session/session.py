@@ -175,11 +175,15 @@ class Session:
         # tune-mismatch rule diffs this stamp against the store later
         kcfg = active_kernel_configs(machine=self.machine.name,
                                      store=self.workspace.tune_store)
+        from repro.tune import active_dispatch_table
+        dtab = active_dispatch_table(machine=self.machine.name,
+                                     store=self.workspace.tune_store)
         rec = record_from_phases(
             config, ms, machine=self.machine.name,
             meta={"smoke": smoke, "seq": seq, "batch": batch, "amp": amp,
                   "fusion": fusion, "scale_wall": scale_wall,
-                  "kernel_configs": kcfg, **dict(meta or {})})
+                  "kernel_configs": kcfg, "dispatch_table": dtab,
+                  **dict(meta or {})})
         self.workspace.trace_store.append(rec)
         self.workspace.write_header(self.machine.name)
         from repro.trace.timeline import ascii_timeline, build_timeline
@@ -237,6 +241,9 @@ class Session:
         stats = engine.run_trace(reqs, max_ticks=max_ticks)
         kcfg = active_kernel_configs(machine=self.machine.name,
                                      store=self.workspace.tune_store)
+        from repro.tune import active_dispatch_table
+        dtab = active_dispatch_table(machine=self.machine.name,
+                                     store=self.workspace.tune_store)
         rec = serve_record(
             config, engine, stats, self.machine,
             matmul_class=_matmul_class(run),
@@ -245,7 +252,7 @@ class Session:
                   "n_slots": n_slots, "max_len": max_len,
                   "prefill_chunk": engine.chunk, "page_size": page_size,
                   "seed": seed, "kernel_configs": kcfg,
-                  **dict(meta or {})})
+                  "dispatch_table": dtab, **dict(meta or {})})
         self.workspace.trace_store.append(rec)
         self.workspace.write_header(self.machine.name)
         problems = stats.gate()
@@ -333,9 +340,38 @@ class Session:
     def tune(self, kernels: Sequence[str] | None = None, *,
              backend: str = "pallas", smoke: bool = False,
              ceilings: bool = False, force: bool = False,
-             iters: int = 3, warmup: int = 1) -> RooflineResult:
+             iters: int = 3, warmup: int = 1, dispatch: bool = False,
+             config: str = "minitron-4b", seq: int = 16, batch: int = 2,
+             amp: str = "O1", full: bool = False) -> RooflineResult:
         """Search kernel configs into the workspace tune store (a point
-        already stored is a pure hit — no re-timing)."""
+        already stored is a pure hit — no re-timing).
+
+        ``dispatch=True`` instead populates the site-keyed
+        fused-vs-reference dispatch table (docs/DESIGN.md §16): trace
+        ``config``'s train phases under ``fusion="auto"`` and measure
+        every dispatch site encountered — a second call over the same
+        workspace is a 100% store hit (zero re-timings).  The smoke
+        variant of ``config`` is traced unless ``full=True`` (the CLI's
+        ``--full``); the kernel-autotuner path keeps its own ``smoke``
+        flag (tiny shapes + spaces) with the opposite default.
+        """
+        if dispatch:
+            from repro.tune.dispatch import search_sites
+            store = self.workspace.tune_store
+            outcome = search_sites(
+                config, seq=seq, batch=batch, amp=amp,
+                machine=self.machine.name, store=store, iters=iters,
+                warmup=warmup, smoke=not full, force=force)
+            self.workspace.write_header(self.machine.name)
+            return RooflineResult(
+                kind="tune", name=f"dispatch/{config}",
+                machine=self.machine,
+                provenance=self._provenance(
+                    store=self.workspace.tune_path,
+                    n_sites=outcome.n_sites,
+                    n_measured=outcome.n_measured),
+                text=outcome.describe(),
+                data=outcome)
         from repro.tune import search, tune_ceilings
         from repro.tune import space as sp
 

@@ -145,24 +145,52 @@ def tune_mismatch_rows(records: Mapping[str, TraceRecord]
     ``{label, run_id, kernel, kind: "stale_default" | "vanished_tuned"}``
     — the sweep report renders them as flag lines, the ``repro.obs``
     advisor turns them into findings.
+
+    The same check covers dispatch provenance: records stamped with
+    ``meta.dispatch_table`` (docs/DESIGN.md §16) whose per-site winner no
+    longer matches the store's current winner yield
+    ``kind: "dispatch_changed"`` rows, and sites whose entries vanished
+    from the store yield ``kind: "dispatch_vanished"`` (``kernel`` then
+    carries the dispatch op name).
     """
     from repro.tune import tuned_kernels
+    from repro.tune.store import _as_store
     now_tuned = set(tuned_kernels(tune_store, machine=machine))
+    now_dispatch = _as_store(tune_store).dispatch_records()
     recs = list(records.values() if isinstance(records, Mapping)
                 else records)
     rows: list[dict[str, Any]] = []
     for rec in recs:
         kcfg = rec.meta.get("kernel_configs")
-        if not isinstance(kcfg, dict):
-            continue
-        for kernel, info in sorted(kcfg.items()):
-            source = info.get("source") if isinstance(info, dict) else None
-            if source == "default" and kernel in now_tuned:
-                rows.append({"label": _label(rec), "run_id": rec.run_id,
-                             "kernel": kernel, "kind": "stale_default"})
-            elif source == "tuned_available" and kernel not in now_tuned:
-                rows.append({"label": _label(rec), "run_id": rec.run_id,
-                             "kernel": kernel, "kind": "vanished_tuned"})
+        if isinstance(kcfg, dict):
+            for kernel, info in sorted(kcfg.items()):
+                source = (info.get("source") if isinstance(info, dict)
+                          else None)
+                if source == "default" and kernel in now_tuned:
+                    rows.append({"label": _label(rec),
+                                 "run_id": rec.run_id, "kernel": kernel,
+                                 "kind": "stale_default"})
+                elif source == "tuned_available" and kernel not in now_tuned:
+                    rows.append({"label": _label(rec),
+                                 "run_id": rec.run_id, "kernel": kernel,
+                                 "kind": "vanished_tuned"})
+        dtab = rec.meta.get("dispatch_table")
+        if isinstance(dtab, dict):
+            for site, entry in sorted(dtab.items()):
+                if not isinstance(entry, dict):
+                    continue
+                op = str(entry.get("op", site))
+                now = now_dispatch.get(site)
+                if now is None:
+                    rows.append({"label": _label(rec),
+                                 "run_id": rec.run_id, "kernel": op,
+                                 "kind": "dispatch_vanished",
+                                 "site": site})
+                elif now.get("impl") != entry.get("impl"):
+                    rows.append({"label": _label(rec),
+                                 "run_id": rec.run_id, "kernel": op,
+                                 "kind": "dispatch_changed",
+                                 "site": site})
     return rows
 
 
@@ -177,12 +205,22 @@ def tune_mismatches(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
                 f"{row['label']}: measured with default {row['kernel']} "
                 "config, but a tuned winner now exists — re-run "
                 "(`repro.sweep run`) to pick it up")
-        else:
+        elif row["kind"] == "vanished_tuned":
             flags.append(
                 f"{row['label']}: measured while tuned {row['kernel']} "
                 "config(s) were available, but the tune store no "
                 "longer has them — wall times are not reproducible "
                 "from current state")
+        elif row["kind"] == "dispatch_changed":
+            flags.append(
+                f"{row['label']}: dispatch winner for {row['kernel']} "
+                "site changed since this point was measured — re-run to "
+                "route through the current winner")
+        else:
+            flags.append(
+                f"{row['label']}: dispatch entry for {row['kernel']} "
+                "site vanished from the tune store — routing is no "
+                "longer reproducible from current state")
     return flags
 
 

@@ -212,8 +212,9 @@ def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
         # which kernel configs this measurement will run with (tuned
         # winners vs hardcoded defaults) — the report side flags points
         # measured with defaults after a tuned winner exists
-        from repro.tune import active_kernel_configs
+        from repro.tune import active_dispatch_table, active_kernel_configs
         meta["kernel_configs"] = active_kernel_configs()
+        meta["dispatch_table"] = active_dispatch_table(machine=point.machine)
 
     if not point.measured:
         cached = _cache_load(cache_dir, point)

@@ -20,10 +20,10 @@ import hashlib
 import json
 from typing import Any, Iterable, Mapping, Sequence
 
+from repro.configs.base import FUSION_MODES
 from repro.configs.registry import select_many
 
 AMP_POLICIES = ("O0", "O1", "O2")
-FUSION_MODES = ("off", "auto")
 
 # smoke preset: the CI-sized campaign (≥ 8 configs, CPU, minutes not hours)
 SMOKE_CONFIGS = 8
@@ -45,7 +45,7 @@ class SweepPoint:
     machine: str                    # MachineSpec name the bounds are against
     measured: bool                  # execute + time, or bound-only analytical
     smoke: bool                     # smoke config variant vs full config
-    fusion: str = "off"             # fused-kernel routing (off | auto)
+    fusion: str = "off"             # fused-kernel routing (FUSION_MODES)
 
     @property
     def n_devices(self) -> int:
@@ -56,7 +56,7 @@ class SweepPoint:
         """Human-readable point id (report rows, progress lines)."""
         mesh = f"m{self.mesh[0]}x{self.mesh[1]}"
         kind = "" if self.measured else "/analytical"
-        fused = "/fused" if self.fusion == "auto" else ""
+        fused = "" if self.fusion == "off" else f"/{self.fusion}"
         return (f"{self.config}/s{self.seq}b{self.batch}/{self.amp}/"
                 f"{mesh}{fused}{kind}")
 

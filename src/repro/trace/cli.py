@@ -32,7 +32,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import RunConfig, ShapeSpec
+from repro.configs.base import FUSION_MODES, RunConfig, ShapeSpec
 from repro.configs.registry import ALL, ARCHS, get_config, get_smoke
 from repro.core.machine import MACHINES
 from repro.session.workspace import LEGACY_TRACE_STORE, resolve_trace_store
@@ -149,7 +149,8 @@ def cmd_record(args) -> int:
             # wall time is only comparable against other fused runs; the
             # kernel_configs stamp is what the tune store offered at
             # measurement time (repro.obs advisor diffs it later)
-            from repro.tune import active_kernel_configs
+            from repro.tune import (active_dispatch_table,
+                                    active_kernel_configs)
             rec = record_from_phases(
                 name, ms, machine=args.machine,
                 meta={"smoke": not args.full, "seq": args.seq,
@@ -157,6 +158,8 @@ def cmd_record(args) -> int:
                       "fusion": args.fusion,
                       "scale_wall": args.scale_wall,
                       "kernel_configs": active_kernel_configs(
+                          machine=args.machine),
+                      "dispatch_table": active_dispatch_table(
                           machine=args.machine)})
             store.append(rec)
         except Exception:
@@ -253,7 +256,7 @@ def add_record_parser(sub):
     rec.add_argument("--seq", type=int, default=32)
     rec.add_argument("--batch", type=int, default=4)
     rec.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
-    rec.add_argument("--fusion", default="off", choices=("off", "auto"),
+    rec.add_argument("--fusion", default="off", choices=FUSION_MODES,
                      help="fused-kernel routing (repro.kernels.fused); "
                           "stamped into the record's meta so before/after "
                           "traces stay distinguishable")

@@ -86,15 +86,18 @@ def adamw_update(grads: Any, state: AdamWState, params: Any,
                                              * p.astype(jnp.float32))
         return newp.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
 
-    # fusion="auto": one fused Pallas pass per eligible leaf (moments +
+    # fusion enabled: one fused Pallas pass per eligible leaf (moments +
     # bias correction + decay + write) instead of the elementwise chain;
-    # ineligible leaves keep the reference path above (same math)
+    # ineligible leaves keep the reference path above (same math), and
+    # under fusion="auto" use_adamw also consults the dispatch table
     fops = None
-    if run is not None and getattr(run, "fusion", "off") == "auto":
-        from repro.kernels.fused import ops as fops
+    if run is not None:
+        from repro.kernels.fused import ops as _fops
+        if _fops.fusion_enabled(run):
+            fops = _fops
     if fops is not None:
         def leaf(g, m, v, p):
-            if fops.adamw_eligible(g, m, v, p):
+            if fops.use_adamw(run, g, m, v, p):
                 return fops.adamw_leaf(g, m, v, p, bc1, bc2, lr=lr, b1=b1,
                                        b2=b2, eps=eps,
                                        weight_decay=weight_decay)

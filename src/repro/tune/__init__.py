@@ -11,9 +11,15 @@ Public surface:
 * :func:`search` / :func:`search_all` / :func:`tune_ceilings` — the
   timing searches (store hit → no re-timing);
 * :class:`TuneStore` / :class:`TuneRecord` — the machine-keyed JSON store;
-* ``python -m repro.tune`` — search / show / apply CLI.
+* :mod:`repro.tune.dispatch` — the site-keyed fused-vs-reference dispatch
+  table ``fusion="auto"`` routes through (:func:`best_impl` /
+  :func:`active_dispatch_table` re-exported here);
+* ``python -m repro.tune`` — search / show / apply / dispatch CLI.
 """
 
+from repro.tune.dispatch import (DispatchKey, DispatchMiss, DispatchRecord,
+                                 active_dispatch_table, best_impl,
+                                 dispatch_scope)
 from repro.tune.search import (TuneOutcome, ceiling_shapes, search,
                                search_all, tune_ceilings)
 from repro.tune.store import (DEFAULT_STORE, TuneRecord, TuneStore,
@@ -22,8 +28,9 @@ from repro.tune.store import (DEFAULT_STORE, TuneRecord, TuneStore,
                               tuned_kernels)
 
 __all__ = [
-    "TuneOutcome", "TuneRecord", "TuneStore", "DEFAULT_STORE",
-    "active_kernel_configs", "best_config", "ceiling_shapes",
-    "config_source", "default_store_path", "search", "search_all",
-    "tune_ceilings", "tune_key", "tuned_kernels",
+    "DispatchKey", "DispatchMiss", "DispatchRecord", "TuneOutcome",
+    "TuneRecord", "TuneStore", "DEFAULT_STORE", "active_dispatch_table",
+    "active_kernel_configs", "best_config", "best_impl", "ceiling_shapes",
+    "config_source", "default_store_path", "dispatch_scope", "search",
+    "search_all", "tune_ceilings", "tune_key", "tuned_kernels",
 ]

@@ -15,6 +15,14 @@ Subcommands (same store/CLI conventions as ``repro.trace`` and
 * ``apply``  — re-time default vs tuned for every stored Pallas winner
   and verify the speedup still holds on this host; exits non-zero if a
   "winner" has gone stale (slower than default beyond --tolerance).
+* ``dispatch {search,show,apply}`` — the site-keyed fused-vs-reference
+  dispatch table (docs/DESIGN.md §16).  ``dispatch search`` traces one
+  config's train phases under ``fusion="auto"`` and measures every
+  dispatch site it encounters (store hit → no re-timing, so a second
+  pass over the same workspace performs zero timings); ``dispatch show``
+  prints the stored winners; ``dispatch apply`` re-times each site and
+  exits non-zero if a stored winner is now slower than the impl it beat
+  beyond --tolerance.
 
 Examples::
 
@@ -22,6 +30,8 @@ Examples::
     PYTHONPATH=src python -m repro.tune search --smoke --store /tmp/tune.json
     PYTHONPATH=src python -m repro.tune show
     PYTHONPATH=src python -m repro.tune apply --tolerance 0.10
+    PYTHONPATH=src python -m repro.tune dispatch search --config minitron-4b
+    PYTHONPATH=src python -m repro.tune dispatch show
 """
 
 from __future__ import annotations
@@ -145,6 +155,72 @@ def cmd_apply(args) -> int:
     return 1 if stale else 0
 
 
+def cmd_dispatch_search(args) -> int:
+    from repro.tune import dispatch as dsp
+    store = TuneStore(args.store)
+    try:
+        outcome = dsp.search_sites(
+            args.config, seq=args.seq, batch=args.batch, amp=args.amp,
+            machine=args.machine, store=store, iters=args.iters,
+            warmup=args.warmup, smoke=not args.full, force=args.force)
+    except Exception:
+        print("[FAIL] dispatch search", file=sys.stderr)
+        traceback.print_exc()
+        return 1
+    print(outcome.describe())
+    print(f"store: {store.path} "
+          f"({len(list(store.dispatch_keys()))} dispatch winners)")
+    return 0
+
+
+def cmd_dispatch_show(args) -> int:
+    from repro.tune import dispatch as dsp
+    recs = dsp.dispatch_table(TuneStore(args.store))
+    if not recs:
+        print(f"dispatch show: no dispatch records in {args.store}",
+              file=sys.stderr)
+        return 2
+    hdr = (f"{'op':<14} {'shapes':<22} {'dtypes':<18} {'flags':<26} "
+           f"{'fused':>10} {'ref':>10} {'winner':<10} {'speedup':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        shapes = ",".join("x".join(map(str, s)) for s in r.shapes)
+        flags = ",".join(f"{k}={v}" for k, v in sorted(r.flags.items()))
+        print(f"{r.op:<14} {shapes:<22} {','.join(r.dtypes):<18} "
+              f"{flags or '-':<26} {r.fused_wall_s*1e6:>8.1f}us "
+              f"{r.ref_wall_s*1e6:>8.1f}us {r.impl:<10} "
+              f"{r.speedup:>6.2f}x")
+    return 0
+
+
+def cmd_dispatch_apply(args) -> int:
+    from repro.tune import dispatch as dsp
+    store = TuneStore(args.store)
+    recs = dsp.dispatch_table(store)
+    if not recs:
+        print(f"dispatch apply: no dispatch records in {args.store}",
+              file=sys.stderr)
+        return 2
+    stale = 0
+    for old in recs:
+        key = dsp.DispatchKey(
+            op=old.op, shapes=tuple(tuple(s) for s in old.shapes),
+            dtypes=tuple(old.dtypes),
+            flags=tuple(sorted(old.flags.items())), machine=old.machine)
+        new = dsp.measure_site(key, store=store, iters=args.iters,
+                               warmup=args.warmup)
+        walls = {"fused": new.fused_wall_s, "reference": new.ref_wall_s}
+        held = (walls[old.impl]
+                <= walls["fused" if old.impl == "reference" else
+                         "reference"] * (1.0 + args.tolerance))
+        mark = "ok  " if held else "LOST"
+        print(f"[{mark}] {new.describe()}  (was {old.impl})")
+        if not held:
+            stale += 1
+    return 1 if stale else 0
+
+
 def main(argv: Sequence[str] | None = None,
          prog: str = "python -m repro.tune") -> int:
     ap = argparse.ArgumentParser(prog=prog, description=__doc__)
@@ -197,6 +273,49 @@ def main(argv: Sequence[str] | None = None,
                      help="allowed tuned-vs-default slowdown before a "
                           "winner counts as stale (default 0.10)")
     app.set_defaults(fn=cmd_apply)
+
+    dp = sub.add_parser("dispatch", help="site-keyed fused-vs-reference "
+                                         "dispatch table")
+    dsub = dp.add_subparsers(dest="dispatch_cmd", required=True)
+
+    def _dcommon(p) -> None:
+        p.add_argument("--store", default=default_store_path(),
+                       help="tune store path (the dispatch table lives in "
+                            "its 'dispatch' namespace)")
+
+    ds = dsub.add_parser("search", help="trace one config under "
+                                        "fusion=auto and measure every "
+                                        "dispatch site (store hit = no "
+                                        "re-timing)")
+    _dcommon(ds)
+    ds.add_argument("--config", default="minitron-4b",
+                    help="model config whose train phases to trace")
+    ds.add_argument("--seq", type=int, default=16)
+    ds.add_argument("--batch", type=int, default=2)
+    ds.add_argument("--amp", default="O1", choices=("O0", "O1", "O2"))
+    ds.add_argument("--machine", default="cpu-host",
+                    choices=sorted(MACHINES))
+    ds.add_argument("--iters", type=int, default=3)
+    ds.add_argument("--warmup", type=int, default=1)
+    ds.add_argument("--full", action="store_true",
+                    help="trace the full config, not the smoke variant")
+    ds.add_argument("--force", action="store_true",
+                    help="re-measure even on a store hit")
+    ds.set_defaults(fn=cmd_dispatch_search)
+
+    dsh = dsub.add_parser("show", help="print the stored dispatch winners")
+    _dcommon(dsh)
+    dsh.set_defaults(fn=cmd_dispatch_show)
+
+    dap = dsub.add_parser("apply", help="re-measure every stored site and "
+                                        "verify each winner still wins")
+    _dcommon(dap)
+    dap.add_argument("--iters", type=int, default=3)
+    dap.add_argument("--warmup", type=int, default=1)
+    dap.add_argument("--tolerance", type=float, default=0.10,
+                     help="allowed winner-vs-loser slowdown before a site "
+                          "counts as stale (default 0.10)")
+    dap.set_defaults(fn=cmd_dispatch_apply)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -1,0 +1,662 @@
+"""Measurement-driven fusion dispatch: site-keyed fused-vs-reference
+routing through the TuneStore (docs/DESIGN.md §16).
+
+BENCH history shows the fused Pallas microkernels are individually
+0.05x–0.15x vs reference on the CPU interpret host while the full fused
+step is 1.06x *faster* — static eligibility predicates guess wrong in
+both directions.  This module stops guessing: under
+``RunConfig.fusion = "auto"`` (alias ``"measured"``) every fused call
+site builds a :class:`DispatchKey` (op, shapes, dtypes, flags, machine),
+and the first encounter times the fused implementation against the
+reference chain it replaces through the exact harness everything else
+measures with (``compile_fn`` + ``time_samples``, min-of-samples, both
+directions — the timed candidate is ``value_and_grad`` wherever the site
+sits inside ``jax.grad``).  The winner persists in the
+:class:`~repro.tune.store.TuneStore`'s ``dispatch`` namespace (same
+atomic-write / corrupt-tolerance / newer-schema rules), so every later
+encounter is a zero-cost :func:`best_impl` lookup.  Eligibility
+predicates in ``repro.kernels.fused.ops`` remain hard *correctness*
+gates only — they never again decide performance.
+
+Routing happens at trace time (the fused wrappers are Python-level
+branches), so a measurement on miss runs *outside* the trace on fresh
+concrete inputs built from the key's shapes — no tracer ever leaks into
+the timing harness.
+
+``REPRO_DISPATCH`` picks the miss policy:
+
+* ``measure`` (default) — time fused vs reference, persist the winner;
+* ``static``  — no timing: an eligible site routes fused (the PR 4
+  behaviour; what the test suite pins so tracing never times);
+* ``frozen``  — raise :class:`DispatchMiss` (reproducible benchmarking:
+  every site must have been measured beforehand).
+
+CLI: ``python -m repro tune dispatch {search,show,apply}``; the session
+surface is ``Session.tune(dispatch=True)``; records stamp
+``meta.dispatch_table`` next to ``meta.kernel_configs`` so reports and
+the obs advisor can see which impl every site ran.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import os
+import time
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from repro.tune.store import SCHEMA_VERSION, TuneStore, _as_store
+
+#: miss policies, resolution order: explicit arg > scope > env > default
+DISPATCH_ENV = "REPRO_DISPATCH"
+MODES = ("measure", "static", "frozen")
+
+#: machine key dispatch winners are stored under when nobody passes one
+DEFAULT_MACHINE = "cpu-host"
+
+#: dispatch-site ops (the fused entry points of repro.kernels.fused.ops)
+OPS = ("fused_norm", "fused_swiglu", "fused_adamw", "embed_grad",
+       "flash_attn")
+
+IMPLS = ("fused", "reference")
+
+
+class DispatchMiss(LookupError):
+    """Raised under ``REPRO_DISPATCH=frozen`` for an unmeasured site."""
+
+
+# --------------------------------------------------------------------------
+# Keys and records
+# --------------------------------------------------------------------------
+
+def _shape2(shape: Sequence[int]) -> tuple[int, int]:
+    """Normalize a (..., d) activation shape to the (rows, d) the kernels
+    actually run on — (B, S, D) and (B·S, D) are the same site."""
+    d = int(shape[-1])
+    rows = int(math.prod(shape[:-1])) if len(shape) > 1 else 1
+    return (rows, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchKey:
+    """One fused call site: op + normalized shapes/dtypes + flags."""
+
+    op: str
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    flags: tuple[tuple[str, str], ...] = ()
+    machine: str = DEFAULT_MACHINE
+
+    @property
+    def key(self) -> str:
+        shapes = ",".join("x".join(str(d) for d in s) for s in self.shapes)
+        flags = ",".join(f"{k}={v}" for k, v in self.flags) or "-"
+        return (f"dispatch|{self.op}|{shapes}|{','.join(self.dtypes)}"
+                f"|{flags}|{self.machine}")
+
+    @property
+    def flag_dict(self) -> dict[str, str]:
+        return dict(self.flags)
+
+
+def make_key(op: str, shapes: Iterable[Sequence[int]],
+             dtypes: Iterable[Any], flags: Mapping[str, Any] | None = None,
+             machine: str | None = None) -> DispatchKey:
+    import jax.numpy as jnp
+    return DispatchKey(
+        op=op,
+        shapes=tuple(tuple(int(d) for d in s) for s in shapes),
+        dtypes=tuple(jnp.dtype(dt).name for dt in dtypes),
+        flags=tuple(sorted((str(k), str(v))
+                           for k, v in (flags or {}).items())),
+        machine=machine or _SCOPE.machine or DEFAULT_MACHINE)
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    """One measured site: both walls, the winner, and provenance."""
+
+    schema_version: int
+    key: str
+    op: str
+    shapes: list[list[int]]
+    dtypes: list[str]
+    flags: dict[str, str]
+    machine: str
+    impl: str                     # "fused" | "reference" — the winner
+    fused_wall_s: float
+    ref_wall_s: float
+    iters: int
+    timestamp: float
+    git_sha: str
+    jax_version: str
+    host: dict[str, str]
+
+    @property
+    def speedup(self) -> float:
+        """Winner-over-loser wall improvement (≥ 1 by construction)."""
+        lo = min(self.fused_wall_s, self.ref_wall_s)
+        hi = max(self.fused_wall_s, self.ref_wall_s)
+        return hi / lo if lo else 1.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DispatchRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        for name, dflt in (("schema_version", 0), ("key", ""), ("op", "?"),
+                           ("shapes", []), ("dtypes", []), ("flags", {}),
+                           ("machine", DEFAULT_MACHINE),
+                           ("impl", "reference"), ("fused_wall_s", 0.0),
+                           ("ref_wall_s", 0.0), ("iters", 0),
+                           ("timestamp", 0.0), ("git_sha", "unknown"),
+                           ("jax_version", "unknown"), ("host", {})):
+            kw.setdefault(name, dflt)
+        return cls(**kw)
+
+    def describe(self) -> str:
+        shapes = ",".join("x".join(map(str, s)) for s in self.shapes)
+        return (f"{self.op:<14} {shapes:<18} "
+                f"fused {self.fused_wall_s * 1e6:9.1f}us vs ref "
+                f"{self.ref_wall_s * 1e6:9.1f}us -> {self.impl} "
+                f"({self.speedup:.2f}x)")
+
+
+# --------------------------------------------------------------------------
+# Scope: store/mode/timer overrides + the re-timing counters CI asserts on
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Scope:
+    store: TuneStore | str | None = None
+    mode: str | None = None
+    machine: str | None = None
+    timer: Callable[..., float] | None = None
+    iters: int = 3
+    warmup: int = 1
+    force: bool = False
+    # counters: "measured" is what the smoke gate asserts == 0 on a
+    # second pass over the same workspace
+    sites: set = dataclasses.field(default_factory=set)
+    n_measured: int = 0
+    n_hit: int = 0
+    n_static: int = 0
+
+    def reset_stats(self) -> None:
+        self.sites = set()
+        self.n_measured = self.n_hit = self.n_static = 0
+
+
+_SCOPE = _Scope()
+
+
+@contextlib.contextmanager
+def dispatch_scope(store: TuneStore | str | None = None,
+                   mode: str | None = None, machine: str | None = None,
+                   timer: Callable[..., float] | None = None,
+                   iters: int | None = None, warmup: int | None = None,
+                   force: bool = False):
+    """Bind store / miss policy / timer for every :func:`decide` call in
+    the ``with`` body (the CLI search, the benches, and tests use this;
+    plain model code relies on the defaults + ``REPRO_DISPATCH``)."""
+    global _SCOPE
+    prev = _SCOPE
+    _SCOPE = _Scope(
+        store=store if store is not None else prev.store,
+        mode=mode if mode is not None else prev.mode,
+        machine=machine if machine is not None else prev.machine,
+        timer=timer if timer is not None else prev.timer,
+        iters=iters if iters is not None else prev.iters,
+        warmup=warmup if warmup is not None else prev.warmup,
+        force=force or prev.force)
+    try:
+        yield _SCOPE
+    finally:
+        _SCOPE = prev
+
+
+def _resolve_mode(mode: str | None = None) -> str:
+    mode = mode or _SCOPE.mode or os.environ.get(DISPATCH_ENV, "measure")
+    if mode not in MODES:
+        raise ValueError(f"unknown {DISPATCH_ENV} mode {mode!r}; "
+                         f"valid: {', '.join(MODES)}")
+    return mode
+
+
+# --------------------------------------------------------------------------
+# Lookup + routing
+# --------------------------------------------------------------------------
+
+def get_record(key: DispatchKey | str,
+               store: TuneStore | str | None = None
+               ) -> DispatchRecord | None:
+    store = _as_store(store if store is not None else _SCOPE.store)
+    k = key.key if isinstance(key, DispatchKey) else key
+    d = store.get_dispatch(k)
+    return DispatchRecord.from_dict(d) if d is not None else None
+
+
+def best_impl(key: DispatchKey | str,
+              store: TuneStore | str | None = None) -> str | None:
+    """Stored winner for a site — ``None`` on a miss (lookup only,
+    never measures)."""
+    rec = get_record(key, store)
+    return rec.impl if rec is not None else None
+
+
+def decide(key: DispatchKey, *, store: TuneStore | str | None = None,
+           mode: str | None = None) -> str:
+    """``"fused"`` or ``"reference"`` for one eligible site.
+
+    Store hit → the stored winner, zero cost.  Miss → the active policy:
+    measure (time both, persist), static (fused — eligibility already
+    passed at the call site), or frozen (raise :class:`DispatchMiss`).
+    """
+    scope = _SCOPE
+    scope.sites.add(key.key)
+    if not (scope.force and _resolve_mode(mode) == "measure"):
+        impl = best_impl(key, store)
+        if impl is not None:
+            scope.n_hit += 1
+            return impl
+    mode = _resolve_mode(mode)
+    if mode == "static":
+        scope.n_static += 1
+        return "fused"
+    if mode == "frozen":
+        raise DispatchMiss(
+            f"REPRO_DISPATCH=frozen and no dispatch entry for {key.key!r} "
+            "— run `python -m repro tune dispatch search` first")
+    return measure_site(key, store=store).impl
+
+
+# --------------------------------------------------------------------------
+# Measurement: fused vs reference through the shared timing harness
+# --------------------------------------------------------------------------
+
+def _default_timer(impl: str, fn: Callable, args: tuple,
+                   iters: int, warmup: int) -> float:
+    """min-of-samples through the one compile-once harness."""
+    del impl
+    from repro.core.profiler import compile_fn, time_samples
+    compiled = compile_fn(fn, args=args)
+    return min(time_samples(compiled, args, iters=iters, warmup=warmup))
+
+
+def site_candidates(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    """{impl: (fn, concrete args)} for one site — standalone
+    microbenchmarks rebuilt from the key (never from live tracers).
+
+    Each candidate covers both directions wherever the site sits inside
+    ``jax.grad`` in the real model: the timed function is
+    ``value_and_grad`` of a scalarized wrapper whose backward is exactly
+    the custom-VJP (fused) or XLA-native (reference) rule.
+    """
+    builder = _SITE_BUILDERS.get(key.op)
+    if builder is None:
+        raise KeyError(f"no dispatch site builder for op {key.op!r} "
+                       f"(known: {', '.join(sorted(_SITE_BUILDERS))})")
+    return builder(key)
+
+
+def measure_site(key: DispatchKey, *,
+                 store: TuneStore | str | None = None,
+                 iters: int | None = None, warmup: int | None = None,
+                 timer: Callable[..., float] | None = None
+                 ) -> DispatchRecord:
+    """Time fused vs reference for one site, persist + return the record."""
+    from repro.trace.store import git_sha, host_fingerprint
+    scope = _SCOPE
+    store = _as_store(store if store is not None else scope.store)
+    iters = iters if iters is not None else scope.iters
+    warmup = warmup if warmup is not None else scope.warmup
+    timer = timer or scope.timer or _default_timer
+
+    import jax
+
+    # a miss usually fires *inside* an ambient trace (jit / eval_shape of
+    # the model step); under omnistaging every array the site builders
+    # create would be staged into that trace as a tracer, which the
+    # compiled-executable timer cannot accept.  ensure_compile_time_eval
+    # escapes to eager evaluation so the measurement inputs are concrete
+    # regardless of the caller's trace context; the compile+time itself
+    # runs outside the context (jit opens its own fresh trace either way).
+    with jax.ensure_compile_time_eval():
+        cands = site_candidates(key)
+        cands = {impl: (fn, tuple(jax.device_put(a) for a in args))
+                 for impl, (fn, args) in cands.items()}
+    walls = {impl: float(timer(impl, fn, args, iters, warmup))
+             for impl, (fn, args) in cands.items()}
+    winner = min(walls, key=walls.get)
+    host = host_fingerprint()
+    rec = DispatchRecord(
+        schema_version=SCHEMA_VERSION, key=key.key, op=key.op,
+        shapes=[list(s) for s in key.shapes], dtypes=list(key.dtypes),
+        flags=key.flag_dict, machine=key.machine, impl=winner,
+        fused_wall_s=walls["fused"], ref_wall_s=walls["reference"],
+        iters=iters, timestamp=time.time(), git_sha=git_sha(),
+        jax_version=host.get("jax", "unknown"), host=host)
+    store.put_dispatch_many({rec.key: rec.to_dict()})
+    scope.n_measured += 1
+    return rec
+
+
+# --------------------------------------------------------------------------
+# Per-op key builders (called from repro.kernels.fused.ops) + measurement
+# candidate builders (called from measure_site)
+# --------------------------------------------------------------------------
+
+def norm_key(x, scale, bias=None, *, kind: str = "rmsnorm",
+             out_dtype=None) -> DispatchKey:
+    shapes = [_shape2(x.shape)]
+    if kind == "rmsnorm_residual":
+        shapes.append(_shape2(x.shape))           # the residual stream
+    shapes.append((int(x.shape[-1]),))            # scale (and bias)
+    import jax.numpy as jnp
+    return make_key("fused_norm", shapes, (x.dtype, scale.dtype),
+                    {"kind": kind,
+                     "out": jnp.dtype(out_dtype or x.dtype).name})
+
+
+def swiglu_key(gate, up, *, act: str = "silu",
+               out_dtype=None) -> DispatchKey:
+    import jax.numpy as jnp
+    return make_key("fused_swiglu",
+                    (_shape2(gate.shape), _shape2(up.shape)),
+                    (gate.dtype, up.dtype),
+                    {"act": act,
+                     "out": jnp.dtype(out_dtype or gate.dtype).name})
+
+
+def adamw_key(p, m) -> DispatchKey:
+    return make_key("fused_adamw", ((int(p.size),),), (p.dtype, m.dtype))
+
+
+def embed_key(table, tokens, compute_dtype) -> DispatchKey:
+    import jax.numpy as jnp
+    return make_key("embed_grad",
+                    (tuple(int(d) for d in table.shape),
+                     (int(tokens.size),)),
+                    (table.dtype, tokens.dtype),
+                    {"compute": jnp.dtype(compute_dtype).name})
+
+
+def flash_key(q_shape: Sequence[int], k_shape: Sequence[int], dtype,
+              *, chunk: int) -> DispatchKey:
+    return make_key("flash_attn",
+                    (tuple(int(d) for d in q_shape),
+                     tuple(int(d) for d in k_shape)),
+                    (dtype,), {"chunk": int(chunk)})
+
+
+def _fill(key_seed: int, shape: Sequence[int], dtype):
+    """Concrete measurement input: random for floats, ids for ints."""
+    import jax
+    import jax.numpy as jnp
+    dt = jnp.dtype(dtype)
+    if dt.kind in ("i", "u"):
+        n = int(math.prod(shape))
+        return (jnp.arange(n, dtype=dt) % 97).reshape(shape)
+    return jax.random.normal(jax.random.PRNGKey(key_seed), tuple(shape),
+                             jnp.float32).astype(dt)
+
+
+def _grad_wrapped(f: Callable, n_args: int) -> Callable:
+    """value_and_grad of sum-of-outputs — times fwd *and* bwd in one
+    wall number, driving exactly the custom-VJP/XLA backward rules."""
+    import jax
+    import jax.numpy as jnp
+
+    def loss(*args):
+        out = f(*args)
+        leaves = out if isinstance(out, tuple) else (out,)
+        return sum(jnp.sum(o.astype(jnp.float32)) for o in leaves)
+
+    return jax.value_and_grad(loss, argnums=tuple(range(n_args)))
+
+
+def _norm_site(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    import jax.numpy as jnp
+    from repro.kernels.fused import ops as fops
+    flags = key.flag_dict
+    kind = flags.get("kind", "rmsnorm")
+    out_dtype = jnp.dtype(flags.get("out", key.dtypes[0]))
+    rows, d = key.shapes[0]
+    xdt, sdt = key.dtypes[0], key.dtypes[-1]
+    x = _fill(0, (rows, d), xdt)
+    scale = _fill(1, (d,), sdt)
+    eps = 1e-5
+    if kind == "rmsnorm_residual":
+        h = _fill(2, (rows, d), xdt)
+
+        def ref(a, b, s):
+            r = a + b
+            return r, fops._rms_ref(r, s, eps, out_dtype)
+
+        fused = lambda a, b, s: fops.rmsnorm_residual(
+            a, b, s, eps=eps, out_dtype=out_dtype)
+        args = (x, h, scale)
+    elif kind == "layernorm":
+        bias = _fill(2, (d,), sdt)
+        ref = lambda a, s, b: fops._ln_ref(a, s, b, eps, out_dtype)
+        fused = lambda a, s, b: fops.layernorm(
+            a, s, b, eps=eps, out_dtype=out_dtype)
+        args = (x, scale, bias)
+    else:
+        ref = lambda a, s: fops._rms_ref(a, s, eps, out_dtype)
+        fused = lambda a, s: fops.rmsnorm(a, s, eps=eps,
+                                          out_dtype=out_dtype)
+        args = (x, scale)
+    n = len(args)
+    return {"fused": (_grad_wrapped(fused, n), args),
+            "reference": (_grad_wrapped(ref, n), args)}
+
+
+def _swiglu_site(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.fused import ops as fops
+    flags = key.flag_dict
+    act = flags.get("act", "silu")
+    out_dtype = jnp.dtype(flags.get("out", key.dtypes[0]))
+    rows, d = key.shapes[0]
+    g = _fill(0, (rows, d), key.dtypes[0])
+    u = _fill(1, (rows, d), key.dtypes[1])
+
+    def ref(a, b):
+        af = a.astype(jnp.float32)
+        h = jax.nn.silu(af) if act == "silu" else jax.nn.gelu(af)
+        return (h * b.astype(jnp.float32)).astype(out_dtype)
+
+    fused = lambda a, b: fops.swiglu(a, b, act=act, out_dtype=out_dtype)
+    return {"fused": (_grad_wrapped(fused, 2), (g, u)),
+            "reference": (_grad_wrapped(ref, 2), (g, u))}
+
+
+def _adamw_site(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    import jax.numpy as jnp
+    from repro.kernels.fused import ops as fops
+    n = int(key.shapes[0][0])
+    pdt, mdt = key.dtypes[0], key.dtypes[-1]
+    g = _fill(0, (n,), pdt)
+    m = _fill(1, (n,), mdt)
+    v = jnp.abs(_fill(2, (n,), mdt))
+    p = _fill(3, (n,), pdt)
+    bc = jnp.asarray(0.1, jnp.float32)
+    hp = dict(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1)
+
+    def ref(g_, m_, v_, p_, b1_, b2_):
+        gf = g_.astype(jnp.float32)
+        m2 = hp["b1"] * m_.astype(jnp.float32) + (1 - hp["b1"]) * gf
+        v2 = hp["b2"] * v_.astype(jnp.float32) + (1 - hp["b2"]) * gf * gf
+        step = (m2 / b1_) / (jnp.sqrt(v2 / b2_) + hp["eps"])
+        newp = p_.astype(jnp.float32) - hp["lr"] * (
+            step + hp["weight_decay"] * p_.astype(jnp.float32))
+        return newp.astype(p_.dtype), m2.astype(m_.dtype), \
+            v2.astype(v_.dtype)
+
+    fused = lambda g_, m_, v_, p_, b1_, b2_: fops.adamw_leaf(
+        g_, m_, v_, p_, b1_, b2_, **hp)
+    args = (g, m, v, p, bc, bc)
+    # the optimizer is never differentiated — forward-only timing
+    return {"fused": (fused, args), "reference": (ref, args)}
+
+
+def _embed_site(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    import jax.numpy as jnp
+    from repro.kernels.fused import ops as fops
+    vocab, d = key.shapes[0]
+    (n_tok,) = key.shapes[1]
+    cd = jnp.dtype(key.flag_dict.get("compute", "float32"))
+    table = _fill(0, (vocab, d), key.dtypes[0])
+    tokens = (_fill(1, (n_tok,), key.dtypes[1]) % vocab)
+
+    fused = lambda t, tok: fops.embed_with_onehot_grad(t, tok, cd)
+    ref = lambda t, tok: t.astype(cd)[tok]
+    # grad wrt the table only (argnums=(0,)): the backward is the whole
+    # point — one-hot matmul vs XLA-CPU's per-row scatter loop
+    import jax
+
+    def wrap(f):
+        return jax.value_and_grad(
+            lambda t, tok: jnp.sum(f(t, tok).astype(jnp.float32)),
+            argnums=0)
+
+    return {"fused": (wrap(fused), (table, tokens)),
+            "reference": (wrap(ref), (table, tokens))}
+
+
+def _flash_site(key: DispatchKey) -> dict[str, tuple[Callable, tuple]]:
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import ops as fa_ops
+    from repro.models import layers as L
+    q_shape, k_shape = key.shapes
+    B, S = q_shape[0], q_shape[1]
+    chunk = int(key.flag_dict.get("chunk", 1024))
+    q = _fill(0, q_shape, key.dtypes[0])
+    k = _fill(1, k_shape, key.dtypes[0])
+    v = _fill(2, k_shape, key.dtypes[0])
+    positions = jnp.arange(S)
+
+    fused = lambda q_, k_, v_: fa_ops.flash_attention_gqa(q_, k_, v_)
+
+    def ref(q_, k_, v_):
+        if S > chunk and S % chunk == 0:
+            return L._sdpa_chunked(q_, k_, v_, positions, positions,
+                                   True, chunk)
+        return L._sdpa(q_, k_, v_, positions, positions, True)
+
+    return {"fused": (_grad_wrapped(fused, 3), (q, k, v)),
+            "reference": (_grad_wrapped(ref, 3), (q, k, v))}
+
+
+_SITE_BUILDERS: dict[str, Callable[[DispatchKey],
+                                   dict[str, tuple[Callable, tuple]]]] = {
+    "fused_norm": _norm_site,
+    "fused_swiglu": _swiglu_site,
+    "fused_adamw": _adamw_site,
+    "embed_grad": _embed_site,
+    "flash_attn": _flash_site,
+}
+
+
+# --------------------------------------------------------------------------
+# Whole-workload search (the CLI / Session.tune(dispatch=True) surface)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DispatchSearchOutcome:
+    """What one ``tune dispatch search`` pass did."""
+
+    config: str
+    n_sites: int                  # distinct sites the trace encountered
+    n_measured: int               # sites actually timed this pass
+    n_hit: int                    # store hits (zero-cost routing)
+    records: list[DispatchRecord]
+
+    @property
+    def all_cached(self) -> bool:
+        return self.n_measured == 0
+
+    def describe(self) -> str:
+        lines = [f"dispatch search [{self.config}]: {self.n_sites} "
+                 f"site(s), {self.n_measured} measured, "
+                 f"{self.n_hit} store hit(s)"]
+        lines += ["  " + r.describe() for r in self.records]
+        return "\n".join(lines)
+
+
+def search_sites(config: str = "minitron-4b", *, seq: int = 16,
+                 batch: int = 2, amp: str = "O1",
+                 machine: str = DEFAULT_MACHINE,
+                 store: TuneStore | str | None = None,
+                 iters: int = 3, warmup: int = 1, smoke: bool = True,
+                 force: bool = False,
+                 timer: Callable[..., float] | None = None
+                 ) -> DispatchSearchOutcome:
+    """Measure every dispatch site one config's train step encounters.
+
+    Traces the fwd/bwd/opt phases abstractly under ``fusion="auto"`` with
+    the miss policy forced to ``measure`` — each site the trace touches
+    either hits the store (no timing) or is measured and persisted.  A
+    second search over the same workspace is a 100% store hit: zero
+    re-timings (the ``dispatch_smoke`` CI gate).
+    """
+    import jax
+
+    from repro.configs.base import RunConfig
+    from repro.configs.registry import get_config, get_smoke
+    from repro.models import api as M
+    from repro.trace.cli import build_phase_args
+
+    cfg = get_smoke(config) if smoke else get_config(config)
+    run = RunConfig(amp=amp, fusion="auto")
+    model = M.build(cfg)
+    phases = build_phase_args(model, run, seq=seq, batch=batch,
+                              concrete=False)
+    with dispatch_scope(store=store, mode="measure", machine=machine,
+                        timer=timer, iters=iters, warmup=warmup,
+                        force=force) as scope:
+        scope.reset_stats()
+        for _, (fn, args) in phases.items():
+            jax.eval_shape(fn, *args)
+        st = _as_store(store if store is not None else None)
+        recs = [DispatchRecord.from_dict(d)
+                for k, d in sorted(st.dispatch_records().items())
+                if k in scope.sites]
+        return DispatchSearchOutcome(
+            config=config, n_sites=len(scope.sites),
+            n_measured=scope.n_measured, n_hit=scope.n_hit, records=recs)
+
+
+def dispatch_table(store: TuneStore | str | None = None,
+                   machine: str | None = None) -> list[DispatchRecord]:
+    """All stored dispatch winners (optionally one machine's), sorted."""
+    st = _as_store(store)
+    out = [DispatchRecord.from_dict(d)
+           for d in st.dispatch_records().values()]
+    if machine is not None:
+        out = [r for r in out if r.machine == machine]
+    out.sort(key=lambda r: (r.op, r.key))
+    return out
+
+
+def active_dispatch_table(machine: str = DEFAULT_MACHINE,
+                          store: TuneStore | str | None = None
+                          ) -> dict[str, dict[str, Any]]:
+    """Per site: what the dispatch table held at stamp time.
+
+    The ``meta.dispatch_table`` counterpart of ``active_kernel_configs``
+    — records stamp it so reports and the obs advisor can diff a
+    measurement's routing provenance against the store later
+    (``dispatch_stale`` / ``tune_mismatch`` rules).
+    """
+    return {r.key: {"op": r.op, "impl": r.impl,
+                    "fused_wall_s": r.fused_wall_s,
+                    "ref_wall_s": r.ref_wall_s,
+                    "git_sha": r.git_sha, "jax": r.jax_version,
+                    "timestamp": r.timestamp}
+            for r in dispatch_table(store, machine)}

@@ -101,18 +101,28 @@ class TuneRecord:
 
 
 class TuneStore:
-    """Point-lookup JSON store of :class:`TuneRecord` winners."""
+    """Point-lookup JSON store of :class:`TuneRecord` winners.
+
+    One document, two namespaces: ``records`` (kernel-config winners,
+    the PR 3 autotuner) and ``dispatch`` (site-keyed fused-vs-reference
+    winners, ``repro.tune.dispatch``).  Both share the same atomic-write
+    / corrupt-tolerance / newer-schema behaviour, and every write
+    preserves the other namespace.
+    """
 
     def __init__(self, path: str | None = None):
         self.path = path or default_store_path()
-        self._cache: tuple[tuple[float, int], dict[str, Any]] | None = None
+        self._cache: tuple[tuple[float, int],
+                           dict[str, dict[str, Any]]] | None = None
 
     # -- read ------------------------------------------------------------
-    def _load(self) -> dict[str, Any]:
+    def _load_doc(self) -> dict[str, dict[str, Any]]:
+        """Both namespaces, per-record-corruption dropped, cached per
+        (mtime, size)."""
         try:
             st = os.stat(self.path)
         except OSError:
-            return {}
+            return {"records": {}, "dispatch": {}}
         stamp = (st.st_mtime, st.st_size)
         if self._cache and self._cache[0] == stamp:
             return self._cache[1]
@@ -129,13 +139,22 @@ class TuneStore:
                 f"{self.path}: schema {doc.get('schema_version')} > "
                 f"{SCHEMA_VERSION} (written by newer code) — ignored")
             doc = {}
-        records = doc.get("records")
         # per-record corruption (non-dict values from truncated or
         # hand-edited stores) is dropped here, same never-fatal rule
-        doc = ({k: v for k, v in records.items() if isinstance(v, dict)}
-               if isinstance(records, dict) else {})
-        self._cache = (stamp, doc)
-        return doc
+        clean = {}
+        for ns in ("records", "dispatch"):
+            raw = doc.get(ns)
+            clean[ns] = ({k: v for k, v in raw.items()
+                          if isinstance(v, dict)}
+                         if isinstance(raw, dict) else {})
+        self._cache = (stamp, clean)
+        return clean
+
+    def _load(self) -> dict[str, Any]:
+        return self._load_doc()["records"]
+
+    def _load_dispatch(self) -> dict[str, Any]:
+        return self._load_doc()["dispatch"]
 
     def get(self, key: str) -> TuneRecord | None:
         d = self._load().get(key)
@@ -156,6 +175,28 @@ class TuneStore:
     def keys(self) -> Iterable[str]:
         return self._load().keys()
 
+    # -- dispatch namespace (repro.tune.dispatch) -------------------------
+    def get_dispatch(self, key: str) -> dict[str, Any] | None:
+        d = self._load_dispatch().get(key)
+        if d is None:
+            return None
+        if d.get("schema_version", 0) > SCHEMA_VERSION:
+            warnings.warn(f"{self.path}: dispatch entry {key!r} from a "
+                          "newer schema — skipped")
+            return None
+        return d
+
+    def dispatch_keys(self) -> Iterable[str]:
+        return self._load_dispatch().keys()
+
+    def dispatch_records(self) -> dict[str, dict[str, Any]]:
+        return {k: v for k, v in self._load_dispatch().items()
+                if v.get("schema_version", 0) <= SCHEMA_VERSION}
+
+    def put_dispatch_many(self,
+                          records: Mapping[str, Mapping[str, Any]]) -> None:
+        self._write(dispatch=records)
+
     # -- write -----------------------------------------------------------
     def put(self, rec: TuneRecord) -> TuneRecord:
         self.put_many({rec.key: rec.to_dict()})
@@ -165,9 +206,21 @@ class TuneStore:
         """Write several raw record dicts in one read-modify-write (one
         atomic replace — the merge path folds a whole remote store in
         without N rewrites)."""
-        merged = dict(self._load())
-        merged.update({k: dict(v) for k, v in records.items()})
-        doc = {"schema_version": SCHEMA_VERSION, "records": merged}
+        self._write(records=records)
+
+    def _write(self, records: Mapping[str, Mapping[str, Any]] = (),
+               dispatch: Mapping[str, Mapping[str, Any]] = ()) -> None:
+        """Merge additions into one or both namespaces and atomically
+        replace the document — the untouched namespace is preserved."""
+        current = self._load_doc()
+        merged = {ns: dict(current[ns]) for ns in ("records", "dispatch")}
+        merged["records"].update(
+            {k: dict(v) for k, v in dict(records).items()})
+        merged["dispatch"].update(
+            {k: dict(v) for k, v in dict(dispatch).items()})
+        doc = {"schema_version": SCHEMA_VERSION,
+               "records": merged["records"],
+               "dispatch": merged["dispatch"]}
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
         tmp = f"{self.path}.tmp.{os.getpid()}"

@@ -1,0 +1,13 @@
+"""Shared test environment.
+
+``REPRO_DISPATCH=static`` pins the measured-dispatch miss policy for the
+whole suite: tests that trace models under ``fusion="auto"`` route every
+eligible site to the fused impl (the pre-dispatch behavior they were
+written against) instead of triggering real fused-vs-reference timing on
+a store miss.  Dispatch tests that want the other policies set the mode
+explicitly via ``dispatch_scope(mode=...)`` / monkeypatched env.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_DISPATCH", "static")

@@ -1,0 +1,361 @@
+"""repro.tune.dispatch: site-keyed fused-vs-reference routing.
+
+Key stability, the TuneStore ``dispatch`` namespace, the miss policies
+(measure / static / frozen), zero-re-timing search, fleet merge,
+provenance rows + the advisor's ``dispatch_stale`` rule, and the CLI
+loop — all with deterministic fake timers (no real kernel timing)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import FUSION_MODES, RunConfig
+from repro.tune import dispatch as dsp
+from repro.tune.store import SCHEMA_VERSION, TuneStore
+
+
+def fake_timer(walls):
+    """Deterministic walls per impl; records which impls were 'timed'."""
+    calls = []
+
+    def timer(impl, fn, args, iters, warmup):
+        calls.append(impl)
+        return walls[impl]
+
+    timer.calls = calls
+    return timer
+
+
+def _norm_key(rows=8, d=16, machine="cpu-host"):
+    return dsp.make_key(
+        "fused_norm", [(rows, d), (d,)], ["float32", "float32"],
+        flags={"kind": "rmsnorm", "out": "float32"}, machine=machine)
+
+
+class TestKeys:
+    def test_key_string_is_stable(self):
+        k = _norm_key()
+        assert k.key == ("dispatch|fused_norm|8x16,16|float32,float32"
+                         "|kind=rmsnorm,out=float32|cpu-host")
+        assert k.flag_dict == {"kind": "rmsnorm", "out": "float32"}
+
+    def test_batch_dims_normalize_to_rows(self):
+        # (B, S, D) and (B*S, D) are the same site
+        x3 = jax.ShapeDtypeStruct((4, 8, 16), jnp.bfloat16)
+        x2 = jax.ShapeDtypeStruct((32, 16), jnp.bfloat16)
+        s = jax.ShapeDtypeStruct((16,), jnp.float32)
+        assert dsp.norm_key(x3, s).key == dsp.norm_key(x2, s).key
+
+    def test_machine_and_flags_key_separately(self):
+        a = _norm_key(machine="cpu-host")
+        b = _norm_key(machine="tpu-v4")
+        assert a.key != b.key
+        c = dsp.make_key("fused_norm", [(8, 16), (16,)],
+                         ["float32", "float32"],
+                         flags={"kind": "layernorm", "out": "float32"})
+        assert c.key != a.key
+
+    def test_dtype_objects_normalize(self):
+        a = dsp.make_key("fused_swiglu", [(8, 16)], [jnp.bfloat16])
+        b = dsp.make_key("fused_swiglu", [(8, 16)], ["bfloat16"])
+        assert a.key == b.key
+
+
+class TestStoreNamespace:
+    def test_roundtrip_coexists_with_tune_records(self, tmp_path):
+        from repro.tune.store import make_record
+        path = str(tmp_path / "tune.json")
+        store = TuneStore(path)
+        store.put(make_record("triad", (1024,), "float32", "cpu-host",
+                              "pallas", {"block": 512}, wall_s=1e-4,
+                              metric=1e9, metric_name="bytes_per_s",
+                              default_wall_s=2e-4, default_metric=5e8,
+                              n_candidates=4))
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer({"fused": 1e-3,
+                                                  "reference": 2e-3})):
+            assert dsp.decide(key) == "fused"
+        fresh = TuneStore(path)                  # reload from disk
+        assert fresh.get_dispatch(key.key)["impl"] == "fused"
+        assert len(fresh.records()) == 1         # tune namespace intact
+        with open(path) as f:
+            doc = json.load(f)
+        assert set(doc) == {"schema_version", "records", "dispatch"}
+
+    def test_corrupt_store_not_fatal(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        store = TuneStore(path)
+        with pytest.warns(UserWarning, match="corrupt"):
+            assert store.get_dispatch("anything") is None
+
+    def test_newer_schema_doc_skipped(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        with open(path, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION + 1,
+                       "dispatch": {"k": {"impl": "fused"}}}, f)
+        with pytest.warns(UserWarning, match="newer"):
+            assert TuneStore(path).get_dispatch("k") is None
+
+
+class TestDecide:
+    def test_measure_persists_then_hits(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        timer = fake_timer({"fused": 2e-3, "reference": 1e-3})
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=timer) as scope:
+            assert dsp.decide(key) == "reference"
+            assert scope.n_measured == 1
+            # second encounter: zero-cost store hit, no re-timing
+            assert dsp.decide(key) == "reference"
+            assert scope.n_hit == 1 and scope.n_measured == 1
+        assert sorted(timer.calls) == ["fused", "reference"]
+
+    def test_static_routes_fused_without_timing(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        timer = fake_timer({})
+        with dsp.dispatch_scope(store=store, mode="static",
+                                timer=timer) as scope:
+            assert dsp.decide(_norm_key()) == "fused"
+        assert scope.n_static == 1 and not timer.calls
+        assert store.dispatch_records() == {}    # nothing persisted
+
+    def test_frozen_raises_on_unmeasured_site(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        with dsp.dispatch_scope(store=store, mode="frozen"):
+            with pytest.raises(dsp.DispatchMiss, match="frozen"):
+                dsp.decide(_norm_key())
+
+    def test_frozen_serves_measured_site(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer({"fused": 1e-3,
+                                                  "reference": 2e-3})):
+            dsp.decide(key)
+        with dsp.dispatch_scope(store=store, mode="frozen"):
+            assert dsp.decide(key) == "fused"
+
+    def test_env_sets_default_mode(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(dsp.DISPATCH_ENV, "frozen")
+        store = TuneStore(str(tmp_path / "t.json"))
+        with dsp.dispatch_scope(store=store):    # no explicit mode
+            with pytest.raises(dsp.DispatchMiss):
+                dsp.decide(_norm_key())
+
+    def test_unknown_mode_rejected(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(dsp.DISPATCH_ENV, "sometimes")
+        with dsp.dispatch_scope(store=TuneStore(str(tmp_path / "t.json"))):
+            with pytest.raises(ValueError, match="sometimes"):
+                dsp.decide(_norm_key())
+
+    def test_force_re_measures_despite_hit(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer({"fused": 1e-3,
+                                                  "reference": 2e-3})):
+            dsp.decide(key)
+        with dsp.dispatch_scope(store=store, mode="measure", force=True,
+                                timer=fake_timer({"fused": 3e-3,
+                                                  "reference": 1e-3})
+                                ) as scope:
+            assert dsp.decide(key) == "reference"
+            assert scope.n_measured == 1 and scope.n_hit == 0
+
+
+class TestRecords:
+    def test_record_fields_and_speedup(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer({"fused": 1e-3,
+                                                  "reference": 3e-3})):
+            dsp.decide(key)
+        rec = dsp.get_record(key, store)
+        assert rec.impl == "fused" and rec.op == "fused_norm"
+        assert rec.speedup == pytest.approx(3.0)
+        assert rec.git_sha and rec.jax_version
+        # no stored winner is slower than the impl it replaced
+        win = rec.fused_wall_s if rec.impl == "fused" else rec.ref_wall_s
+        lose = rec.ref_wall_s if rec.impl == "fused" else rec.fused_wall_s
+        assert win <= lose
+
+    def test_from_dict_tolerates_sparse_payload(self):
+        rec = dsp.DispatchRecord.from_dict({"impl": "fused"})
+        assert rec.impl == "fused" and rec.git_sha == "unknown"
+        assert rec.speedup == 1.0
+
+    def test_best_impl_is_lookup_only(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        assert dsp.best_impl(_norm_key(), store) is None
+        assert store.dispatch_records() == {}
+
+    def test_active_dispatch_table(self, tmp_path):
+        store = TuneStore(str(tmp_path / "t.json"))
+        key = _norm_key()
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer({"fused": 1e-3,
+                                                  "reference": 2e-3})):
+            dsp.decide(key)
+        tab = dsp.active_dispatch_table(store=store)
+        assert tab[key.key]["impl"] == "fused"
+        assert tab[key.key]["op"] == "fused_norm"
+        assert "git_sha" in tab[key.key] and "jax" in tab[key.key]
+        assert dsp.active_dispatch_table(machine="tpu-v4", store=store) == {}
+
+
+class TestSearch:
+    def test_second_search_is_zero_retimings(self, tmp_path):
+        store = TuneStore(str(tmp_path / "tune.json"))
+        timer = fake_timer({"fused": 1e-3, "reference": 2e-3})
+        first = dsp.search_sites("minitron-4b", seq=8, batch=1,
+                                 store=store, timer=timer)
+        assert first.n_sites > 0
+        assert first.n_measured == first.n_sites
+        n_timed = len(timer.calls)
+        second = dsp.search_sites("minitron-4b", seq=8, batch=1,
+                                  store=store, timer=timer)
+        assert second.all_cached and second.n_measured == 0
+        assert len(timer.calls) == n_timed       # not one more timing
+        assert second.n_sites == first.n_sites
+
+    def test_measured_table_routes_real_trace(self, tmp_path):
+        # a fusion="auto" trace over the searched workspace is a pure
+        # store hit even under the frozen (error-on-miss) policy
+        from repro.configs.registry import get_smoke
+        from repro.models import build
+        from repro.trace.cli import build_phase_args
+
+        store = TuneStore(str(tmp_path / "tune.json"))
+        dsp.search_sites("minitron-4b", seq=8, batch=1, store=store,
+                         timer=fake_timer({"fused": 1e-3,
+                                           "reference": 2e-3}))
+        model = build(get_smoke("minitron-4b"))
+        run = RunConfig(amp="O1", fusion="auto")
+        phases = build_phase_args(model, run, seq=8, batch=1,
+                                  concrete=False)
+        with dsp.dispatch_scope(store=store, mode="frozen") as scope:
+            for fn, args in phases.values():
+                jax.eval_shape(fn, *args)
+        assert scope.n_hit > 0 and scope.n_measured == 0
+
+
+class TestFleetAndProvenance:
+    def _measured_store(self, path, impl="fused"):
+        store = TuneStore(path)
+        walls = {"fused": 1e-3, "reference": 2e-3}
+        if impl == "reference":
+            walls = {"fused": 2e-3, "reference": 1e-3}
+        with dsp.dispatch_scope(store=store, mode="measure",
+                                timer=fake_timer(walls)):
+            dsp.decide(_norm_key())
+        return store
+
+    def test_merge_folds_dispatch_namespace(self, tmp_path):
+        from repro.obs.merge import merge_tune
+        remote = str(tmp_path / "remote.json")
+        local = str(tmp_path / "local.json")
+        self._measured_store(remote)
+        rep = merge_tune(local, remote)
+        assert rep.n_added == 1
+        assert TuneStore(local).dispatch_records()
+        rep2 = merge_tune(local, remote)         # idempotent
+        assert rep2.n_added == 0 and rep2.n_dup == 1
+
+    def test_merge_conflict_newer_timestamp_wins(self, tmp_path):
+        remote = str(tmp_path / "remote.json")
+        local = str(tmp_path / "local.json")
+        self._measured_store(local, impl="fused")
+        store = self._measured_store(remote, impl="reference")
+        key = _norm_key().key
+        d = dict(store.get_dispatch(key))
+        d["timestamp"] = d["timestamp"] + 1e6    # remote is newer
+        store.put_dispatch_many({key: d})
+        from repro.obs.merge import merge_tune
+        rep = merge_tune(local, remote)
+        assert rep.n_conflict == 1
+        assert TuneStore(local).get_dispatch(key)["impl"] == "reference"
+
+    def test_tune_mismatch_dispatch_rows(self, tmp_path):
+        from repro.sweep.aggregate import tune_mismatch_rows
+        from repro.trace.store import record_from_payloads
+        store = self._measured_store(str(tmp_path / "tune.json"))
+        key = _norm_key().key
+        rec = record_from_payloads(
+            "cfg", {"fwd": {"wall_s": 0.1}}, machine="cpu-host",
+            meta={"sweep_point": "p1", "label": "cfg/p1",
+                  "dispatch_table": {
+                      key: {"op": "fused_norm", "impl": "fused"},
+                      "dispatch|gone|8x8|f32|-|cpu-host": {
+                          "op": "gone", "impl": "fused"}}})
+        rows = tune_mismatch_rows([rec], store)
+        kinds = {r["kind"] for r in rows}
+        assert kinds == {"dispatch_vanished"}    # stored winner matches
+        rec.meta["dispatch_table"][key]["impl"] = "reference"
+        kinds = {r["kind"] for r in tune_mismatch_rows([rec], store)}
+        assert kinds == {"dispatch_vanished", "dispatch_changed"}
+
+    def test_advisor_dispatch_stale_rule(self, tmp_path):
+        from repro.obs.advisor import rule_dispatch_stale
+        from repro.trace.store import record_from_payloads
+        fresh = record_from_payloads(
+            "cfg", {"fwd": {"wall_s": 0.1}}, machine="cpu-host",
+            meta={"dispatch_table": {"k": {
+                "op": "fused_norm", "impl": "fused",
+                "git_sha": "0000000000aa", "jax": "0.0.1"}}})
+        findings = rule_dispatch_stale([fresh])
+        # the record's own sha/jax differ from the stamped winner's
+        assert [f.rule for f in findings] == ["dispatch_stale"]
+        assert "fused_norm" in findings[0].evidence[0]
+        same = record_from_payloads(
+            "cfg", {"fwd": {"wall_s": 0.1}}, machine="cpu-host",
+            meta={"dispatch_table": {"k": {
+                "op": "fused_norm", "impl": "fused",
+                "git_sha": fresh.git_sha,
+                "jax": fresh.host.get("jax", "unknown")}}})
+        assert rule_dispatch_stale([same]) == []
+
+
+class TestFusionValidation:
+    def test_unknown_fusion_raises(self):
+        with pytest.raises(ValueError, match="fusion"):
+            RunConfig(fusion="sometimes")
+
+    def test_all_modes_accepted(self):
+        for mode in FUSION_MODES:
+            assert RunConfig(fusion=mode).fusion == mode
+        assert "measured" in FUSION_MODES
+
+
+class TestCli:
+    def test_search_show_apply_loop(self, tmp_path, capsys, monkeypatch):
+        from repro.tune.cli import main
+        monkeypatch.setattr(
+            dsp, "_default_timer",
+            fake_timer({"fused": 1e-3, "reference": 2e-3}))
+        store = str(tmp_path / "tune.json")
+        rc = main(["dispatch", "search", "--store", store,
+                   "--seq", "8", "--batch", "1"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "0 measured" not in out
+        rc = main(["dispatch", "search", "--store", store,
+                   "--seq", "8", "--batch", "1"])
+        assert rc == 0
+        assert "0 measured" in capsys.readouterr().out
+        assert main(["dispatch", "show", "--store", store]) == 0
+        assert "fused_norm" in capsys.readouterr().out
+        rc = main(["dispatch", "apply", "--store", store,
+                   "--tolerance", "1.0"])
+        assert rc == 0
+
+    def test_show_empty_store_exits_2(self, tmp_path, capsys):
+        from repro.tune.cli import main
+        assert main(["dispatch", "show",
+                     "--store", str(tmp_path / "none.json")]) == 2

@@ -224,3 +224,82 @@ class TestDataDeterminism:
         if step > 0:
             b0 = s(step - 1)
             assert any(not np.array_equal(b0[k], b1[k]) for k in b1)
+
+
+class TestDispatchParity:
+    """Fused and reference are interchangeable at every dispatch site:
+    whichever impl measurement happens to pick, value AND grad stay
+    within dtype tolerance of the reference math (docs/DESIGN.md §16 —
+    eligibility is the only correctness gate; routing is pure perf)."""
+
+    @given(rows=st.sampled_from([1, 2, 7, 16]),
+           d=st.sampled_from([16, 64]),
+           dtype=st.sampled_from(["float32", "bfloat16"]),
+           site=st.sampled_from(["rmsnorm", "swiglu"]),
+           fused_wins=st.booleans())
+    @settings(max_examples=20, deadline=None)
+    def test_picked_impl_matches_reference_value_and_grad(
+            self, rows, d, dtype, site, fused_wins):
+        from repro.kernels.fused import ops as fops
+        from repro.tune import dispatch as dsp
+        from repro.tune.store import TuneStore
+
+        dt = jnp.dtype(dtype)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(rows * d))
+        a = jax.random.normal(k1, (rows, d), jnp.float32).astype(dt)
+        b = jax.random.normal(k2, (rows, d), jnp.float32).astype(dt)
+        s = jnp.ones((d,), jnp.float32)
+
+        if site == "rmsnorm":
+            assert fops.norm_eligible(a, s)
+            key = dsp.norm_key(a, s)
+            fused = lambda: fops.rmsnorm(a, s)
+            ref = lambda: fops._rms_ref(a, s, 1e-5, dt)
+        else:
+            assert fops.swiglu_eligible(a, b)
+            key = dsp.swiglu_key(a, b)
+            fused = lambda: fops.swiglu(a, b)
+            ref = lambda: (jax.nn.silu(a.astype(jnp.float32))
+                           * b.astype(jnp.float32)).astype(dt)
+
+        # route the site with a measurement that picks either impl
+        walls = ({"fused": 1e-3, "reference": 2e-3} if fused_wins
+                 else {"fused": 2e-3, "reference": 1e-3})
+        import tempfile
+        with tempfile.TemporaryDirectory() as tmp:
+            store = TuneStore(f"{tmp}/tune.json")
+
+            def timer(impl, fn, args, iters, warmup):
+                return walls[impl]
+
+            with dsp.dispatch_scope(store=store, mode="measure",
+                                    timer=timer):
+                picked = dsp.decide(key)
+        assert picked == ("fused" if fused_wins else "reference")
+        impls = {"fused": fused, "reference": ref}
+
+        def loss(f):
+            return jnp.sum(f().astype(jnp.float32))
+
+        tol = 1e-5 if dt == jnp.float32 else 3e-2
+        v_ref, v_pick = loss(impls["reference"]), loss(impls[picked])
+        np.testing.assert_allclose(np.asarray(v_pick), np.asarray(v_ref),
+                                   rtol=tol, atol=tol * rows * d)
+        if site == "rmsnorm":
+            g_of = lambda f: jax.grad(
+                lambda x: jnp.sum(f(x).astype(jnp.float32)))(a)
+            g_ref = g_of(lambda x: fops._rms_ref(x, s, 1e-5, dt))
+            g_pick = g_of(lambda x: fops.rmsnorm(x, s)
+                          if picked == "fused"
+                          else fops._rms_ref(x, s, 1e-5, dt))
+        else:
+            g_of = lambda f: jax.grad(
+                lambda x: jnp.sum(f(x).astype(jnp.float32)))(a)
+            swi_ref = lambda x: (jax.nn.silu(x.astype(jnp.float32))
+                                 * b.astype(jnp.float32)).astype(dt)
+            g_ref = g_of(swi_ref)
+            g_pick = g_of(lambda x: fops.swiglu(x, b)
+                          if picked == "fused" else swi_ref(x))
+        np.testing.assert_allclose(np.asarray(g_pick, np.float32),
+                                   np.asarray(g_ref, np.float32),
+                                   rtol=tol * 10, atol=tol * 10)
