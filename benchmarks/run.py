@@ -41,6 +41,7 @@ SUITES = (
     "decode_batch_study",  # beyond-paper: decode tok/s vs global batch
     "obs_smoke",         # repro.obs: merge→trend→advise fleet loop
     "serve_bench",       # repro.serve: latency gate + phase attribution
+    "chaos_smoke",       # repro.resilience: faults→watchdog→journal→resume
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

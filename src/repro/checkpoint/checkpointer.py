@@ -10,14 +10,22 @@ Design goals (task spec §fault tolerance):
   ``restore(..., shardings=...)`` re-shards on load.
 * **async** — ``save_async`` snapshots to host memory synchronously (cheap
   vs device compute) and writes files on a background thread, overlapping
-  I/O with the next training steps.
+  I/O with the next training steps; ``healthy()`` lets the training loop
+  notice a dead writer without blocking on the next save.
 * **self-describing** — a ``manifest.json`` stores the tree structure,
   per-leaf dtype/shape, plus user metadata (step, data offset, RNG state),
   everything a restart needs.
+* **verified** — the manifest carries a sha256 digest over every leaf's
+  name, dtype, shape and bytes; ``restore`` recomputes it and raises
+  :class:`CheckpointCorrupt` on mismatch, so a truncated or bit-flipped
+  checkpoint is rejected instead of silently training from garbage.
+  GC never deletes the directory ``latest`` points to, so a concurrent
+  restore that just resolved ``latest`` cannot lose its target.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -27,8 +35,14 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.resilience import faults
+
 _MANIFEST = "manifest.json"
 _LATEST = "latest"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed its integrity check (digest mismatch)."""
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -50,34 +64,58 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _tree_digest(named_arrays: list[tuple[str, np.ndarray]]) -> str:
+    """sha256 over (name, dtype, shape, bytes) of every leaf, in sorted
+    name order — the save-time fingerprint ``restore`` verifies."""
+    h = hashlib.sha256()
+    for name, arr in sorted(named_arrays, key=lambda t: t[0]):
+        h.update(name.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(tuple(arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
 def save(directory: str, step: int, tree: Any,
-         metadata: dict | None = None) -> str:
-    """Synchronous atomic save. Returns the committed directory."""
+         metadata: dict | None = None, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the committed directory.
+
+    ``keep`` bounds how many committed checkpoints GC retains
+    (0 = never collect).
+    """
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    return _write(directory, step, host_tree, metadata or {})
+    return _write(directory, step, host_tree, metadata or {}, keep)
 
 
 class AsyncCheckpointer:
     """Snapshot synchronously, write on a background thread."""
 
-    def __init__(self) -> None:
+    def __init__(self, keep: int = 3) -> None:
+        self.keep = keep
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
     def save(self, directory: str, step: int, tree: Any,
-             metadata: dict | None = None) -> None:
+             metadata: dict | None = None, keep: int | None = None) -> None:
         self.wait()                                       # one write in flight
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
+        keep_n = self.keep if keep is None else keep
 
         def work():
             try:
-                _write(directory, step, host_tree, metadata or {})
+                _write(directory, step, host_tree, metadata or {}, keep_n)
             except BaseException as e:                    # surfaced on wait()
                 self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
+
+    def healthy(self) -> bool:
+        """True while no background write has failed.  Non-blocking: the
+        training loop polls this each log interval so a dead checkpointer
+        fails the run promptly instead of at the *next* save attempt."""
+        return self._error is None
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -88,7 +126,10 @@ class AsyncCheckpointer:
             raise err
 
 
-def _write(directory: str, step: int, host_tree: Any, metadata: dict) -> str:
+def _write(directory: str, step: int, host_tree: Any, metadata: dict,
+           keep: int = 3) -> str:
+    faults.active_plan().maybe_raise("ckpt_fail", target=step,
+                                    exc=faults.InjectedFault)
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -99,12 +140,15 @@ def _write(directory: str, step: int, host_tree: Any, metadata: dict) -> str:
     leaves = _leaf_paths(host_tree)
     manifest = {"step": step, "metadata": metadata, "leaves": {}}
     arrays = {}
+    named = []
     for name, leaf in leaves:
         arr = np.asarray(leaf)
         key = name.replace("/", "__")
         arrays[key] = arr
+        named.append((name, arr))
         manifest["leaves"][name] = {"key": key, "dtype": str(arr.dtype),
                                     "shape": list(arr.shape)}
+    manifest["digest"] = _tree_digest(named)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
@@ -115,14 +159,29 @@ def _write(directory: str, step: int, host_tree: Any, metadata: dict) -> str:
         f.write(os.path.basename(final))
     os.replace(os.path.join(directory, _LATEST + ".tmp"),
                os.path.join(directory, _LATEST))
-    _gc(directory, keep=3)
+    _gc(directory, keep=keep)
     return final
 
 
 def _gc(directory: str, keep: int) -> None:
+    """Collect old ``step_*`` dirs down to ``keep`` (0 disables GC).
+
+    The directory ``latest`` points to is always protected, even when it
+    is not among the newest ``keep``: a restore that resolved ``latest``
+    a moment ago must still find its target on disk.
+    """
+    if keep <= 0:
+        return
+    try:
+        with open(os.path.join(directory, _LATEST)) as f:
+            pointed = f.read().strip()
+    except OSError:
+        pointed = ""
     steps = sorted(d for d in os.listdir(directory)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     for d in steps[:-keep]:
+        if d == pointed:
+            continue
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
@@ -135,14 +194,33 @@ def latest_step(directory: str) -> int | None:
         return None
 
 
+def available_steps(directory: str) -> list[int]:
+    """Committed checkpoint steps on disk, oldest first — the fallback
+    ladder a restore walks when the newest checkpoint fails its digest."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return []
+    out = []
+    for d in names:
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                out.append(int(d.removeprefix("step_")))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
 def restore(directory: str, tree_like: Any, step: int | None = None,
-            shardings: Any = None) -> tuple[Any, dict]:
+            shardings: Any = None, verify: bool = True) -> tuple[Any, dict]:
     """Load a checkpoint into the structure of ``tree_like``.
 
     ``shardings`` (optional pytree of NamedSharding, same structure) re-shards
     each leaf for the *current* mesh — the elastic-rescale path: a checkpoint
     written on 256 chips restores cleanly onto 512 or 64.
-    Returns (tree, metadata).
+    ``verify`` recomputes the manifest digest over the loaded arrays and
+    raises :class:`CheckpointCorrupt` on mismatch (manifests predating the
+    digest field pass unverified).  Returns (tree, metadata).
     """
     if step is None:
         step = latest_step(directory)
@@ -152,6 +230,16 @@ def restore(directory: str, tree_like: Any, step: int | None = None,
     with open(os.path.join(src, _MANIFEST)) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(src, "arrays.npz"))
+
+    if verify and "digest" in manifest:
+        named = [(name, np.asarray(data[info["key"]]))
+                 for name, info in manifest["leaves"].items()]
+        got = _tree_digest(named)
+        if got != manifest["digest"]:
+            raise CheckpointCorrupt(
+                f"{src}: digest mismatch (manifest "
+                f"{manifest['digest'][:12]}…, arrays {got[:12]}…) — "
+                "checkpoint rejected")
 
     names = [n for n, _ in _leaf_paths(tree_like)]
     flat_like, treedef = jax.tree.flatten(tree_like)

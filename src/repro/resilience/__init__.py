@@ -1,0 +1,35 @@
+"""repro.resilience: fault injection, watchdogs, resumable campaigns.
+
+The paper's methodology is *automated* characterization — long unattended
+campaigns whose value is that they finish.  This package makes the
+diagnose → measure → serve loop crash-survivable:
+
+* :mod:`repro.resilience.faults` — a deterministic, seedable
+  fault-injection layer (``REPRO_FAULTS`` / ``--faults``) whose hooks are
+  threaded through the sweep engine, the trainer, the serve engine, the
+  checkpointer and the store write paths;
+* :mod:`repro.resilience.jsonl` — torn-tail detection/repair for the
+  append-only JSONL stores (a writer crash mid-append never poisons the
+  next append);
+* :mod:`repro.resilience.journal` — the crash-safe campaign journal
+  (``sweep_journal.jsonl``) behind ``repro sweep run --resume``;
+* :mod:`repro.resilience.watchdog` — a supervised worker pool with
+  per-task deadlines that kills and replaces hung or crashed workers.
+
+Everything here is stdlib-only at import time: sweep worker processes
+import it before fixing their XLA device count.
+"""
+
+from repro.resilience.faults import (FAULT_ENV, FaultPlan, FaultSpec,
+                                     InjectedFault, TransientFault,
+                                     active_plan, parse_plan)
+from repro.resilience.journal import CampaignJournal, JournalState
+from repro.resilience.jsonl import repair_jsonl_tail
+from repro.resilience.watchdog import Outcome, SupervisedPool
+
+__all__ = [
+    "FAULT_ENV", "FaultPlan", "FaultSpec", "InjectedFault",
+    "TransientFault", "active_plan", "parse_plan",
+    "CampaignJournal", "JournalState", "repair_jsonl_tail",
+    "Outcome", "SupervisedPool",
+]

@@ -1,0 +1,74 @@
+"""Torn-tail repair for append-only JSONL files.
+
+A writer that crashes mid-append (power loss, ``os._exit``, OOM-kill)
+leaves a partial final line with no trailing newline.  Readers already
+skip it as corrupt — but the *next* append would concatenate onto the
+torn bytes and corrupt a good record too.  :func:`repair_jsonl_tail`
+runs on open-for-append: it truncates a torn final line (dropping
+exactly the one record the crashed writer lost), or completes a final
+line that is valid JSON but merely missing its newline (the crash
+happened between the payload write and the newline — the record is
+intact and must not be thrown away).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+#: how far back from EOF the repair scans for the last newline; a single
+#: JSONL record larger than this is out of contract for these stores
+_TAIL_SCAN_BYTES = 4 << 20
+
+
+def repair_jsonl_tail(path: str) -> int:
+    """Repair ``path``'s final line in place.
+
+    Returns the number of torn bytes truncated (0 = file was clean or
+    missing).  A newline-terminated file is left untouched; a trailing
+    fragment that parses as JSON gets its newline appended (0 truncated);
+    anything else after the last newline is truncated away.
+    """
+    try:
+        size = os.path.getsize(path)
+    except OSError:
+        return 0
+    if size == 0:
+        return 0
+    with open(path, "rb+") as f:
+        scan = min(size, _TAIL_SCAN_BYTES)
+        f.seek(size - scan)
+        tail = f.read(scan)
+        if tail.endswith(b"\n"):
+            return 0
+        cut = tail.rfind(b"\n")
+        frag = tail[cut + 1:]                     # cut == -1 → whole tail
+        try:
+            json.loads(frag.decode("utf-8"))
+            f.write(b"\n")                        # complete, just unsealed
+            f.flush()
+            os.fsync(f.fileno())
+            return 0
+        except (ValueError, UnicodeDecodeError):
+            pass
+        keep = size - scan + cut + 1 if cut >= 0 else size - scan
+        if cut < 0 and scan < size:
+            # no newline in the scan window: a single record larger than
+            # the window is out of contract — leave it for the reader's
+            # corrupt-line skip rather than truncating good data
+            return 0
+        f.truncate(keep)
+        f.flush()
+        os.fsync(f.fileno())
+        return len(frag)
+
+
+def fsync_append(path: str, line: str) -> None:
+    """One durable JSONL append: repair the tail, write, flush, fsync."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    repair_jsonl_tail(path)
+    with open(path, "a") as f:
+        f.write(line.rstrip("\n") + "\n")
+        f.flush()
+        os.fsync(f.fileno())

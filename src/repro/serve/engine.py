@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models.api import Model, build
+from repro.resilience import faults
 from repro.serve.paged_kv import DEFAULT_PAGE_SIZE, PagedKVCache
 
 #: families the engine can serve: token-only prompts + a paged KV cache
@@ -98,7 +99,8 @@ class Engine:
                  page_size: int = DEFAULT_PAGE_SIZE,
                  n_pages: int | None = None,
                  prefill_chunk: int | None = None,
-                 queue_capacity: int | None = None):
+                 queue_capacity: int | None = None,
+                 tick_retries: int = 2):
         if cfg.family not in SERVABLE_FAMILIES:
             raise ValueError(
                 f"Engine serves token-prompt KV-cache families "
@@ -117,6 +119,8 @@ class Engine:
         self._slots: list[_Slot | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.tick_count = 0
+        self.tick_retries = tick_retries
+        self.retried_ticks = 0
         # per-executable timing accumulators (the trace layer's input)
         self.wall = {name: 0.0 for name in PHASE_OF}
         self.calls = {name: 0 for name in PHASE_OF}
@@ -492,12 +496,28 @@ class Engine:
 
     def tick(self) -> None:
         """One engine step: admit → prefill chunks → decode → retire."""
+        faults.active_plan().maybe_raise("serve_fault",
+                                        target=self.tick_count)
         self._admit_from_queue()
         for i, slot in enumerate(self._slots):
             if slot is not None and slot.phase == "prefill":
                 self._prefill_step(i)
         self._decode_step()
         self.tick_count += 1
+
+    def _tick_resilient(self) -> None:
+        """``tick`` with bounded retry on transient faults.
+
+        The fault hook fires before any admission or cache mutation, so
+        a retried tick replays cleanly from the same engine state.
+        """
+        for attempt in range(self.tick_retries + 1):
+            try:
+                return self.tick()
+            except faults.TransientFault:
+                if attempt >= self.tick_retries:
+                    raise
+                self.retried_ticks += 1
 
     @property
     def n_active(self) -> int:
@@ -527,7 +547,7 @@ class Engine:
             if i == len(pending) and not self.queue \
                     and self.n_active == 0:
                 break
-            self.tick()
+            self._tick_resilient()
         prefill_wall = (self.wall["prefill_first"]
                         + self.wall["prefill_ext"])
         return stats_from_requests(

@@ -296,12 +296,17 @@ class Session:
     def sweep(self, spec: Any = None, *, smoke: bool = False,
               workers: int | None = None,
               progress: Callable[[str], None] | None = None,
+              resume: bool = False, deadline_s: float | None = None,
+              retries: int = 1,
               **axes: Any) -> RooflineResult:
         """Run a campaign into the workspace sweep store and summarize.
 
         Pass a ready :class:`~repro.sweep.spec.SweepSpec`, ``smoke=True``
         for the CI preset, or axes as keywords
         (``configs=("minitron-4b",), seqs=(16,), amps=("O0", "O1")``...).
+        ``resume``/``deadline_s``/``retries`` forward to
+        :func:`repro.sweep.engine.run_sweep` (campaign resilience knobs;
+        the journal lives beside the workspace sweep store).
         """
         from repro.sweep.aggregate import (latest_per_point, render_summary,
                                            sweep_records)
@@ -323,7 +328,9 @@ class Session:
                             "not both")
         result = run_sweep(spec, store_path=self.workspace.sweep_path,
                            cache_dir=self.workspace.sweep_cache_dir,
-                           workers=workers, progress=progress)
+                           workers=workers, progress=progress,
+                           resume=resume, deadline_s=deadline_s,
+                           retries=retries)
         self.workspace.write_header(self.machine.name)
         recs = latest_per_point(sweep_records(self.workspace.sweep_store,
                                               spec.name))

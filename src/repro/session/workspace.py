@@ -11,6 +11,7 @@ env var.  A :class:`Workspace` consolidates them under one root:
     ├── workspace.json           machine-provenance header (shared)
     ├── trace.jsonl              measured runs        (repro.trace.TraceStore)
     ├── sweep.jsonl              campaign points      (repro.trace.TraceStore)
+    ├── sweep_journal.jsonl      campaign lifecycle journal (repro.resilience)
     ├── sweep_cache/             per-point analysis cache (repro.sweep)
     ├── tune.json                autotuner winners    (repro.tune.TuneStore)
     └── bench/                   benchmarks.run BENCH_<ts>.json output
@@ -51,6 +52,7 @@ HEADER_SCHEMA_VERSION = 1
 # in-workspace file names (one root, fixed layout)
 TRACE_FILENAME = "trace.jsonl"
 SWEEP_FILENAME = "sweep.jsonl"
+JOURNAL_FILENAME = "sweep_journal.jsonl"
 SWEEP_CACHE_DIRNAME = "sweep_cache"
 TUNE_FILENAME = "tune.json"
 HEADER_FILENAME = "workspace.json"
@@ -152,6 +154,10 @@ class Workspace:
     @property
     def sweep_path(self) -> str:
         return os.path.join(self.root, SWEEP_FILENAME)
+
+    @property
+    def journal_path(self) -> str:
+        return os.path.join(self.root, JOURNAL_FILENAME)
 
     @property
     def sweep_cache_dir(self) -> str:

@@ -81,6 +81,9 @@ def spec_from_args(ap: argparse.ArgumentParser, args) -> SweepSpec:
 
 
 def cmd_run(ap: argparse.ArgumentParser, args) -> int:
+    import os
+
+    from repro.resilience.faults import FAULT_ENV, parse_plan
     from repro.sweep.aggregate import latest_per_point, render_summary
     from repro.sweep.engine import run_sweep
     from repro.trace.store import TraceStore
@@ -89,6 +92,10 @@ def cmd_run(ap: argparse.ArgumentParser, args) -> int:
     try:
         spec = spec_from_args(ap, args)
         points, skipped = spec.expand()
+        if args.faults is not None:
+            parse_plan(args.faults)       # reject typos before any work
+            # via the environment so spawned workers inherit the plan
+            os.environ[FAULT_ENV] = args.faults
     except (KeyError, ValueError, OSError) as e:
         # bad user input (unknown selector, malformed mesh/spec file):
         # message + exit 2, not a traceback — same convention as
@@ -102,13 +109,20 @@ def cmd_run(ap: argparse.ArgumentParser, args) -> int:
         spec, store_path=args.store, workers=args.workers,
         cache_dir=None if args.no_cache else resolve_sweep_cache(
             args.cache_dir),
-        progress=print)
-    print(f"[{spec.name}] {result.n_ok} ok ({result.n_cached} cached), "
-          f"{result.n_failed} failed, {len(result.skipped)} skipped")
-    for res in result.results:
-        if not res.ok:
-            print(f"--- {res.point.label} ---\n{res.error}",
-                  file=sys.stderr)
+        progress=print,
+        deadline_s=args.deadline, retries=args.retries,
+        backoff_s=args.backoff, resume=args.resume,
+        journal_path=args.journal if args.journal else ...)
+    resumed = (f", {result.n_resumed} resumed" if result.n_resumed else "")
+    quar = (f" ({result.n_quarantined} quarantined)"
+            if result.n_quarantined else "")
+    print(f"[{spec.name}] {result.n_ok} ok ({result.n_cached} cached"
+          f"{resumed}), {result.n_failed} failed{quar}, "
+          f"{len(result.skipped)} skipped")
+    if result.n_failed:
+        print(f"[{spec.name}] failures:", file=sys.stderr)
+        for line in result.failure_summary():
+            print(f"  {line}", file=sys.stderr)
     if result.n_ok:
         from repro.sweep.aggregate import sweep_records
         recs = latest_per_point(sweep_records(TraceStore(args.store),
@@ -202,6 +216,30 @@ def main(argv: Sequence[str] | None = None,
                           "default: $REPRO_WORKSPACE/sweep_cache, else "
                           f"{LEGACY_SWEEP_CACHE})")
     run.add_argument("--no-cache", action="store_true")
+    run.add_argument("--resume", action="store_true",
+                     help="skip points whose record already landed for "
+                          "this campaign (journal + store scan, keyed by "
+                          "the point content hash) — continue a crashed "
+                          "or quarantine-interrupted run")
+    run.add_argument("--deadline", type=float, default=None,
+                     help="per-point wall-clock deadline in seconds; a "
+                          "point past it has its worker killed and "
+                          "replaced (counts as one failed attempt). "
+                          "A worker's first point pays the jax import — "
+                          "keep deadlines comfortably above it")
+    run.add_argument("--retries", type=int, default=1,
+                     help="extra attempts per failed point before it is "
+                          "quarantined (default 1)")
+    run.add_argument("--backoff", type=float, default=0.25,
+                     help="base retry backoff seconds, doubling each "
+                          "round (default 0.25)")
+    run.add_argument("--faults", default=None,
+                     help="fault-injection plan (same grammar as "
+                          "REPRO_FAULTS, e.g. 'crash_point:0;"
+                          "hang_point:1:30') — exported to workers")
+    run.add_argument("--journal", default=None,
+                     help="campaign journal path (default: "
+                          "sweep_journal.jsonl beside the store)")
     run.set_defaults(fn=cmd_run, parser=run)
 
     rep = sub.add_parser("report", help="render the stored campaign: ranked "

@@ -22,6 +22,14 @@ Two mechanics matter here:
   are cached under the point key, so re-running a campaign recompiles only
   points whose spec actually changed.  Measured points always execute —
   a wall-clock sample is not cacheable — but still share the store schema.
+
+Campaign resilience (docs/DESIGN.md §17) is layered on top: workers run
+under a :class:`~repro.resilience.watchdog.SupervisedPool` so a point that
+hangs past ``deadline_s`` is killed and its worker replaced; failed points
+retry with exponential backoff and are quarantined after ``retries + 1``
+attempts; every lifecycle event lands fsync'd in the campaign journal
+(``sweep_journal.jsonl`` beside the store) so ``--resume`` can skip every
+point whose record already landed — across any number of crashes.
 """
 
 from __future__ import annotations
@@ -30,14 +38,17 @@ import dataclasses
 import hashlib
 import json
 import os
+import time
 import traceback
-from concurrent.futures import ProcessPoolExecutor
 from typing import Any, Callable, Mapping
 
+from repro.resilience import faults
+from repro.resilience.journal import CampaignJournal, journal_path_for
+from repro.resilience.watchdog import SupervisedPool
 from repro.session.workspace import (LEGACY_SWEEP_CACHE, LEGACY_SWEEP_STORE,
                                      resolve_sweep_cache,
                                      resolve_sweep_store)
-from repro.sweep.spec import SweepPoint, SweepSpec, points_by_devices
+from repro.sweep.spec import SweepPoint, SweepSpec
 
 # legacy constants (pre-workspace callers import them); the engine itself
 # resolves through repro.session.workspace so REPRO_WORKSPACE governs it
@@ -54,6 +65,9 @@ class PointResult:
     error: str | None = None
     cached: bool = False
     wall_s: float = 0.0             # total measured step time (0 = analytical)
+    attempts: int = 1
+    quarantined: bool = False       # exhausted its attempts this campaign
+    resumed: bool = False           # skipped: record landed in a prior run
 
     @property
     def ok(self) -> bool:
@@ -76,6 +90,28 @@ class SweepResult:
     @property
     def n_cached(self) -> int:
         return sum(1 for r in self.results if r.cached)
+
+    @property
+    def n_quarantined(self) -> int:
+        return sum(1 for r in self.results if r.quarantined)
+
+    @property
+    def n_resumed(self) -> int:
+        return sum(1 for r in self.results if r.resumed)
+
+    def failure_summary(self) -> list[str]:
+        """One line per failed point: label, attempts, last error line —
+        the operator-facing digest (full tracebacks stay in the journal)."""
+        out = []
+        for r in self.results:
+            if r.ok:
+                continue
+            lines = [ln for ln in (r.error or "").splitlines() if ln.strip()]
+            last = lines[-1].strip() if lines else "unknown error"
+            tag = "quarantined" if r.quarantined else "failed"
+            out.append(f"{r.point.label}: {tag} after {r.attempts} "
+                       f"attempt(s) — {last}")
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -275,9 +311,23 @@ def _worker_init(n_devices: int) -> None:
 
 
 def _point_job(point_dict: dict, iters: int, warmup: int,
-               cache_dir: str | None, sweep_name: str | None) -> dict:
-    """Worker entry: run one point, return a picklable outcome."""
+               cache_dir: str | None, sweep_name: str | None,
+               index: int = 0, attempt: int = 0,
+               in_worker: bool = False) -> dict:
+    """Worker entry: run one point, return a picklable outcome.
+
+    ``index`` is the point's campaign ordinal and ``attempt`` its retry
+    count — the fault-injection site identity (``crash_point:INDEX``,
+    ``hang_point:INDEX:SECS``), passed explicitly because counters do not
+    survive the process boundary.  ``in_worker=False`` (the inline path)
+    skips crash/hang injection: an inline hang cannot be killed and an
+    inline ``os._exit`` would take the campaign driver down with it.
+    """
     point = SweepPoint.from_dict(point_dict)
+    if in_worker:
+        plan = faults.active_plan()
+        plan.maybe_crash("crash_point", target=index, attempt=attempt)
+        plan.maybe_hang("hang_point", target=index, attempt=attempt)
     try:
         rec, cached = run_point(point, iters=iters, warmup=warmup,
                                 cache_dir=cache_dir, sweep_name=sweep_name)
@@ -298,10 +348,36 @@ def _append_outcome(store, point: SweepPoint, outcome: dict) -> PointResult:
                        cached=bool(outcome.get("cached")), wall_s=wall)
 
 
+def _resume_run_ids(store, journal: CampaignJournal | None,
+                    sweep_name: str) -> dict[str, str]:
+    """Point key → run_id for every point already completed in a prior
+    invocation of this campaign.  Union of the journal's ``done`` events
+    and a store scan (covers the crash window between the store append
+    and the journal ``done`` line — the store is the source of truth)."""
+    done: dict[str, str] = {}
+    if journal is not None:
+        done.update(journal.replay(sweep_name).done)
+    try:
+        for rec in store.records_where(
+                lambda r: r.meta.get("sweep") == sweep_name):
+            key = rec.meta.get("sweep_point")
+            if key:
+                done[str(key)] = rec.run_id
+    except OSError:
+        pass
+    return done
+
+
 def run_sweep(sweep: SweepSpec, *, store_path: str | None = None,
               workers: int | None = None,
               cache_dir: "str | None | type(Ellipsis)" = ...,
-              progress: Callable[[str], None] | None = None) -> SweepResult:
+              progress: Callable[[str], None] | None = None,
+              deadline_s: float | None = None,
+              retries: int = 1,
+              backoff_s: float = 0.25,
+              resume: bool = False,
+              journal_path: "str | None | type(Ellipsis)" = ...,
+              ) -> SweepResult:
     """Run a whole campaign: expand, execute, persist one record per point.
 
     ``store_path=None`` resolves through the workspace rules
@@ -314,12 +390,26 @@ def run_sweep(sweep: SweepSpec, *, store_path: str | None = None,
     ``None`` picks ``min(4, cpu_count)`` for analytical sweeps but ``1``
     for measured ones: concurrent wall-clock samples contend for the same
     CPUs and skew each other, so parallel measurement is opt-in.
+
+    Resilience knobs: ``deadline_s`` kills (and replaces) a worker whose
+    point runs longer — mind that a worker's *first* point pays the jax
+    import, so deadlines under ~30 s are asking for false kills;
+    ``retries`` bounds extra attempts per point (backoff doubles from
+    ``backoff_s`` each round) before the point is **quarantined**;
+    ``resume=True`` skips points whose record already landed (journal ∪
+    store scan, keyed by the point content hash — zero duplicates);
+    ``journal_path`` defaults to ``sweep_journal.jsonl`` beside the store
+    (``None`` disables journalling, and with it ``--resume``'s journal
+    half).
     """
     from repro.trace.store import TraceStore
 
     store_path = resolve_sweep_store(store_path)
     if cache_dir is ...:
         cache_dir = resolve_sweep_cache(None)
+    if journal_path is ...:
+        journal_path = journal_path_for(store_path)
+    journal = CampaignJournal(journal_path) if journal_path else None
     say = progress or (lambda s: None)
     points, skipped = sweep.expand()
     for p, reason in skipped:
@@ -330,35 +420,110 @@ def run_sweep(sweep: SweepSpec, *, store_path: str | None = None,
     if workers is None:
         workers = 1 if sweep.measure else min(4, os.cpu_count() or 1)
 
+    done_ids = (_resume_run_ids(store, journal, sweep.name)
+                if resume else {})
+    todo: list[tuple[int, SweepPoint]] = []
+    for i, point in enumerate(points):
+        run_id = done_ids.get(point.key)
+        if run_id is not None:
+            res = PointResult(point, run_id=run_id or None, resumed=True,
+                              attempts=0)
+            results.append(res)
+            say(_ok_line(res))
+        else:
+            todo.append((i, point))
+
+    attempts: dict[str, int] = {p.key: 0 for _, p in todo}
+    errors: dict[str, str] = {}
+
+    def record_attempt(point: SweepPoint) -> int:
+        a = attempts[point.key]
+        attempts[point.key] = a + 1
+        if journal is not None:
+            journal.log("attempt", sweep=sweep.name, point=point.key,
+                        label=point.label, attempt=a)
+        return a
+
+    def settle(point: SweepPoint, outcome: dict) -> PointResult | None:
+        """Store + journal one attempt's outcome.  Returns the final
+        PointResult, or None if the point should be retried."""
+        n = attempts[point.key]
+        if not outcome.get("error"):
+            res = _append_outcome(store, point, outcome)
+            res.attempts = n
+            if journal is not None:
+                journal.log("done", sweep=sweep.name, point=point.key,
+                            label=point.label, attempt=n - 1,
+                            run_id=res.run_id)
+            return res
+        err = outcome["error"]
+        errors[point.key] = err
+        reason = err.strip().splitlines()[-1] if err.strip() else "unknown"
+        if journal is not None:
+            journal.log("fail", sweep=sweep.name, point=point.key,
+                        label=point.label, attempt=n - 1, reason=reason)
+        if n <= retries:
+            return None                               # retry next round
+        if journal is not None:
+            journal.log("quarantine", sweep=sweep.name, point=point.key,
+                        label=point.label, attempt=n - 1, reason=reason)
+        return PointResult(point, error=err, attempts=n, quarantined=True)
+
     opts = (sweep.iters, sweep.warmup, cache_dir, sweep.name)
+
     if workers == 0:
-        for point in points:
-            res = _append_outcome(store, point,
-                                  _point_job(point.to_dict(), *opts))
+        for i, point in todo:
+            while True:
+                a = record_attempt(point)
+                outcome = _point_job(point.to_dict(), *opts,
+                                     index=i, attempt=a, in_worker=False)
+                res = settle(point, outcome)
+                if res is not None:
+                    break
+                time.sleep(backoff_s * (2 ** a))
             results.append(res)
             say(_ok_line(res) if res.ok else f"[FAIL] {point.label}")
-        return SweepResult(results, skipped)
-
-    import multiprocessing
-    ctx = multiprocessing.get_context("spawn")
-    for n_devices, group in points_by_devices(points).items():
-        n_workers = min(workers, len(group))
-        with ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx,
-                                 initializer=_worker_init,
-                                 initargs=(n_devices,)) as pool:
-            futures = {pool.submit(_point_job, p.to_dict(), *opts): p
-                       for p in group}
-            for fut, point in futures.items():
-                try:
-                    outcome = fut.result()
-                except Exception:
-                    # a worker died (OOM-kill, native crash): report the
-                    # point as failed and keep draining the campaign —
-                    # sibling futures on the broken pool fail the same way
-                    outcome = {"error": traceback.format_exc()}
-                res = _append_outcome(store, point, outcome)
-                results.append(res)
-                say(_ok_line(res) if res.ok else f"[FAIL] {point.label}")
+    else:
+        by_dev: dict[int, list[tuple[int, SweepPoint]]] = {}
+        for i, point in todo:
+            by_dev.setdefault(point.n_devices, []).append((i, point))
+        for n_devices, group in sorted(by_dev.items()):
+            n_workers = min(workers, len(group))
+            label_of = {p.key: p.label for _, p in group}
+            with SupervisedPool(_point_job, n_workers,
+                                init=_worker_init, initargs=(n_devices,),
+                                deadline_s=deadline_s) as pool:
+                pending = list(group)
+                rnd = 0
+                while pending:
+                    tasks = []
+                    for i, point in pending:
+                        a = record_attempt(point)
+                        tasks.append((point.key,
+                                      (point.to_dict(), *opts, i, a, True)))
+                    outcomes = pool.run(
+                        tasks,
+                        on_event=lambda kind, key: say(
+                            f"[watchdog] {label_of[key]}: {kind}"))
+                    retry = []
+                    for i, point in pending:
+                        out = outcomes[point.key]
+                        if out.kind == "ok" and out.error is None:
+                            outcome = out.value or {"error": "empty worker "
+                                                             "reply"}
+                        else:
+                            outcome = {"error": out.error or out.kind}
+                        res = settle(point, outcome)
+                        if res is None:
+                            retry.append((i, point))
+                            continue
+                        results.append(res)
+                        say(_ok_line(res) if res.ok
+                            else f"[FAIL] {point.label}")
+                    if retry:
+                        time.sleep(backoff_s * (2 ** min(rnd, 6)))
+                    pending = retry
+                    rnd += 1
     # keep campaign order (configs outermost), not completion order
     order = {p.key: i for i, p in enumerate(points)}
     results.sort(key=lambda r: order[r.point.key])
@@ -366,6 +531,8 @@ def run_sweep(sweep: SweepSpec, *, store_path: str | None = None,
 
 
 def _ok_line(res: PointResult) -> str:
+    if res.resumed:
+        return f"[ok] {res.point.label} -> run {res.run_id} (resumed)"
     tag = " (cached)" if res.cached else ""
     wall = (f" wall {res.wall_s*1e3:.3f} ms" if res.wall_s else " bound-only")
     return f"[ok] {res.point.label} -> run {res.run_id}{wall}{tag}"

@@ -9,7 +9,10 @@ model, config name and mesh — enough to answer "what changed?" when
 
 The store is deliberately boring: plain JSONL, append-only, corrupt lines
 skipped on read (a crashed writer never poisons history), records from a
-*newer* schema skipped with a warning instead of mis-parsed.
+*newer* schema skipped with a warning instead of mis-parsed.  Appends are
+durable (flush + fsync) and self-healing: a torn final line left by a
+crashed writer is repaired before the next record lands, so one crash
+costs at most its own record, never a neighbour's.
 """
 
 from __future__ import annotations
@@ -187,11 +190,33 @@ class TraceStore:
     def __init__(self, path: str):
         self.path = path
 
+    @property
+    def _store_kind(self) -> str:
+        """Store name fault specs target (``torn_tail:trace`` etc.)."""
+        base = os.path.basename(self.path)
+        return base[:-len(".jsonl")] if base.endswith(".jsonl") else base
+
     def append(self, rec: TraceRecord) -> TraceRecord:
+        from repro.resilience import faults
+        from repro.resilience.jsonl import repair_jsonl_tail
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
+        repair_jsonl_tail(self.path)
+        line = rec.to_json()
+        spec = faults.active_plan().fires("torn_tail", self._store_kind)
+        if spec is not None:
+            # simulate a writer crash mid-append: half the payload, no
+            # newline, durably on disk — then die (well, raise)
+            with open(self.path, "a") as f:
+                f.write(line[:max(1, len(line) // 2)])
+                f.flush()
+                os.fsync(f.fileno())
+            raise faults.InjectedFault(
+                f"injected {spec.render()}: torn append to {self.path}")
         with open(self.path, "a") as f:
-            f.write(rec.to_json() + "\n")
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
         return rec
 
     def records(self, config: str | None = None) -> list[TraceRecord]:

@@ -16,7 +16,13 @@ needs (task spec §large-scale runnability):
   restarted job got (checkpoints are mesh-independent), so scaling the pod
   count up or down between runs needs no conversion step;
 * **preemption safety** — SIGTERM sets a flag; the loop checkpoints and
-  exits cleanly at the next step boundary.
+  exits cleanly at the next step boundary;
+* **fault tolerance** — restore walks checkpoints newest→oldest and skips
+  any that fail their integrity digest (a truncated newest checkpoint
+  falls back to the previous one, never to garbage); transient step
+  faults are retried with exponential backoff; the async checkpointer's
+  ``healthy()`` probe is polled each log interval so a dead writer fails
+  the run promptly, not at the next save.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ import numpy as np
 from repro.checkpoint import checkpointer as ckpt
 from repro.configs.base import RunConfig
 from repro.models.api import Model
+from repro.resilience import faults
 from repro.train.step import TrainState, init_state, make_train_step
 
 
@@ -43,6 +50,8 @@ class TrainReport:
     stragglers: list = dataclasses.field(default_factory=list)
     restarts: int = 0
     resumed_from: int | None = None
+    retries: int = 0                 # transient step faults retried past
+    skipped_ckpts: list = dataclasses.field(default_factory=list)
 
 
 class Trainer:
@@ -55,7 +64,10 @@ class Trainer:
                  state_shardings: Any = None,
                  batch_shardings: Any = None,
                  straggler_factor: float = 2.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 ckpt_keep: int = 3,
+                 step_retries: int = 2,
+                 retry_backoff_s: float = 0.05):
         self.model, self.run = model, run
         self.make_batch = make_batch
         self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
@@ -63,9 +75,11 @@ class Trainer:
         self.state_shardings = state_shardings
         self.batch_shardings = batch_shardings
         self.straggler_factor = straggler_factor
+        self.step_retries = step_retries
+        self.retry_backoff_s = retry_backoff_s
         self.report = TrainReport()
         self._stop = False
-        self._async_ckpt = ckpt.AsyncCheckpointer()
+        self._async_ckpt = ckpt.AsyncCheckpointer(keep=ckpt_keep)
 
         step_fn = make_train_step(model, run, lr=lr)
         jit_kwargs: dict[str, Any] = {}
@@ -80,16 +94,25 @@ class Trainer:
     # -------------------------------------------------------------------
     def _init_or_resume(self, seed: int) -> TrainState:
         if self.ckpt_dir is not None:
-            last = ckpt.latest_step(self.ckpt_dir)
-            if last is not None:
+            steps = ckpt.available_steps(self.ckpt_dir)
+            if steps:
                 like = jax.eval_shape(
                     lambda: init_state(self.model, self.run,
                                        jax.random.PRNGKey(seed)))
-                state, meta = ckpt.restore(self.ckpt_dir, like,
-                                           shardings=self.state_shardings)
-                self.report.resumed_from = int(meta.get("step", last))
-                self.report.restarts += 1
-                return state
+                # newest first; skip anything corrupt or half-written —
+                # resuming from an older verified checkpoint beats dying
+                for step in reversed(steps):
+                    try:
+                        state, meta = ckpt.restore(
+                            self.ckpt_dir, like, step=step,
+                            shardings=self.state_shardings)
+                    except (ckpt.CheckpointCorrupt, OSError, KeyError,
+                            ValueError) as e:
+                        self.report.skipped_ckpts.append((step, repr(e)))
+                        continue
+                    self.report.resumed_from = int(meta.get("step", step))
+                    self.report.restarts += 1
+                    return state
         with_mesh = self.mesh if self.mesh is not None else _null_ctx()
         with with_mesh:
             state = init_state(self.model, self.run, jax.random.PRNGKey(seed))
@@ -111,6 +134,32 @@ class Trainer:
             return jax.device_put(batch, self.batch_shardings)
         return batch
 
+    def _step_resilient(self, i: int, batch: dict,
+                        log: Callable[[str], None],
+                        plan: "faults.FaultPlan"):
+        """One train step with fault hooks and transient-fault retry.
+
+        The step function is a pure function of (state, batch), so a
+        retry recomputes bit-identical results — losses after a retried
+        step match an uninterrupted run exactly.
+        """
+        attempts = self.step_retries + 1
+        for attempt in range(attempts):
+            try:
+                plan.maybe_crash("crash_step", target=i)
+                plan.maybe_raise("step_fault", target=i)
+                return self.step_fn(self.state, batch)
+            except faults.TransientFault as e:
+                if attempt + 1 >= attempts:
+                    raise
+                self.report.retries += 1
+                delay = self.retry_backoff_s * (2 ** attempt)
+                log(f"[trainer] transient fault at step {i} "
+                    f"(attempt {attempt + 1}/{attempts}): {e}; "
+                    f"retrying in {delay:g}s")
+                time.sleep(delay)
+        raise AssertionError("unreachable")
+
     def fit(self, n_steps: int, log_every: int = 10,
             log: Callable[[str], None] = print) -> TrainReport:
         self._install_sigterm()
@@ -118,13 +167,15 @@ class Trainer:
         start_step = int(self.state.step)
         ctx = self.mesh if self.mesh is not None else _null_ctx()
         with ctx:
+            plan = faults.active_plan()
             for i in range(start_step, n_steps):
                 if self._stop:
                     log(f"[trainer] SIGTERM at step {i}; checkpointing")
                     break
                 batch = self._put_batch(self.make_batch(i))
                 t0 = time.perf_counter()
-                self.state, metrics = self.step_fn(self.state, batch)
+                self.state, metrics = self._step_resilient(i, batch, log,
+                                                           plan)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
 
@@ -141,6 +192,10 @@ class Trainer:
                     log(f"[trainer] step {i:5d} loss {loss:.4f} "
                         f"({dt*1e3:.1f} ms, grad_norm "
                         f"{float(metrics['grad_norm']):.3f})")
+                    if not self._async_ckpt.healthy():
+                        log(f"[trainer] checkpoint writer failed; "
+                            f"surfacing at step {i}")
+                        self._async_ckpt.wait()    # raises the stored error
                 if (self.ckpt_dir is not None and self.ckpt_every
                         and (i + 1) % self.ckpt_every == 0):
                     self._async_ckpt.save(self.ckpt_dir, i + 1, self.state,
