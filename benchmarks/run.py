@@ -42,6 +42,7 @@ SUITES = (
     "obs_smoke",         # repro.obs: merge→trend→advise fleet loop
     "serve_bench",       # repro.serve: latency gate + phase attribution
     "chaos_smoke",       # repro.resilience: faults→watchdog→journal→resume
+    "net_smoke",         # repro.net: characterize→attribute→mesh report
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

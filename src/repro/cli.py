@@ -20,6 +20,9 @@ root (``--workspace`` / ``REPRO_WORKSPACE``; default
   forwarded to ``repro.sweep`` with the workspace store;
 * ``tune``         — kernel autotuning (``search`` / ``show`` /
   ``apply``), forwarded to ``repro.tune`` with the workspace store;
+* ``net``          — interconnect roofline level (``characterize`` /
+  ``report``): measured collective ceilings into the workspace tune
+  store, network-bound mesh-scale rankings (``repro.net``);
 * ``trend``        — perf-trend sparklines over stored records +
   harvested ``BENCH_*.json`` (``--gate`` exits non-zero on regression);
 * ``advise``       — mine stored records for known bottleneck patterns,
@@ -41,6 +44,8 @@ Examples::
     PYTHONPATH=src python -m repro compare --config minitron-4b
     PYTHONPATH=src python -m repro sweep run --smoke
     PYTHONPATH=src python -m repro tune search --smoke
+    PYTHONPATH=src python -m repro net characterize --devices 8 --smoke
+    PYTHONPATH=src python -m repro net report
     PYTHONPATH=src python -m repro trend --gate
     PYTHONPATH=src python -m repro advise
     PYTHONPATH=src python -m repro merge /mnt/fleet/hostB/.repro-workspace
@@ -61,7 +66,8 @@ PROG = "python -m repro"
 
 #: workflow order — also the order the subcommands are registered in
 SUBCOMMANDS = ("characterize", "profile", "record", "serve", "report",
-               "compare", "sweep", "tune", "trend", "advise", "merge")
+               "compare", "sweep", "tune", "net", "trend", "advise",
+               "merge")
 
 
 @contextlib.contextmanager
@@ -142,8 +148,22 @@ def cmd_serve(args) -> int:
 
 def cmd_trend(args) -> int:
     s = _session(args)
+    if args.action == "tag":
+        if not args.name:
+            print("trend tag: a tag name is required "
+                  f"(`{PROG} trend tag NAME [--run RUN_ID]`)",
+                  file=sys.stderr)
+            return 2
+        try:
+            res = s.trend_tag(args.name, run_id=args.run)
+        except LookupError as e:
+            print(f"trend tag: {e}", file=sys.stderr)
+            return 2
+        print(res.render())
+        return res.exit_code
     res = s.trend(config=args.config, gate=args.gate,
-                  tolerance=args.tolerance, max_rows=args.max_rows,
+                  tolerance=args.tolerance, baseline=args.baseline,
+                  max_rows=args.max_rows,
                   bench_dirs=args.bench_dir or None)
     print(res.render())
     return res.exit_code
@@ -201,6 +221,8 @@ def _forward(module_main, rest: Sequence[str], prog: str) -> int:
 def _forward_subsystem(name: str, rest: Sequence[str]) -> int:
     if name == "sweep":
         from repro.sweep.cli import main as sub_main
+    elif name == "net":
+        from repro.net.cli import main as sub_main
     else:
         from repro.tune.cli import main as sub_main
     return _forward(sub_main, rest, f"{PROG} {name}")
@@ -349,6 +371,13 @@ def build_parser() -> argparse.ArgumentParser:
                              "+ BENCH_*.json; --gate = CI regression "
                              "gate (repro.obs)")
     _add_workspace(tr)
+    tr.add_argument("action", nargs="?", choices=("tag",),
+                    help="`trend tag NAME [--run ID]` pins a known-good "
+                         "run for --baseline gating")
+    tr.add_argument("name", nargs="?",
+                    help="tag name for `trend tag`")
+    tr.add_argument("--run", default=None,
+                    help="run id to tag (default: newest trace record)")
     tr.add_argument("--config", default=None,
                     help="restrict trace series to one registry config")
     tr.add_argument("--machine", default="cpu-host",
@@ -359,6 +388,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "regressed past --tolerance vs its history")
     tr.add_argument("--tolerance", type=float, default=None,
                     help="relative regression tolerance (default 0.25)")
+    tr.add_argument("--baseline", default=None, metavar="TAG_OR_RUN",
+                    help="pin the gate to a tagged known-good run "
+                         "(`trend tag` name or run id) instead of the "
+                         "rolling median")
     tr.add_argument("--max-rows", type=int, default=40,
                     help="series rows to print (default 40)")
     tr.add_argument("--bench-dir", action="append", metavar="DIR",
@@ -397,7 +430,10 @@ def build_parser() -> argparse.ArgumentParser:
             ("sweep",
              "cross-config campaigns: run / report (repro.sweep flags)"),
             ("tune",
-             "kernel autotuning: search / show / apply (repro.tune flags)")):
+             "kernel autotuning: search / show / apply (repro.tune flags)"),
+            ("net",
+             "interconnect level: characterize / report (repro.net "
+             "flags)")):
         p = sub.add_parser(name, help=help_, add_help=False)
         p.add_argument("rest", nargs=argparse.REMAINDER,
                        help=f"arguments for `{PROG} {name}` "
@@ -408,7 +444,7 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv: Sequence[str] | None = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     explicit_ws, rest = _extract_workspace(argv)
-    if rest[:1] and rest[0] in ("sweep", "tune"):
+    if rest[:1] and rest[0] in ("sweep", "tune", "net"):
         root = Workspace(explicit_ws).root
         with _workspace_env(root):
             return _forward_subsystem(rest[0], rest[1:])

@@ -676,6 +676,31 @@ def _fusion_internals(comp: HloComputation, module: HloModule,
     return dict(flops), vbytes
 
 
+def _async_payload_shapes(op: HloOp, comp: HloComputation) -> list[Shape]:
+    """Output-only shapes of an async ``-start`` collective.
+
+    XLA lowers ``all-reduce`` to an ``(operands..., results..., contexts...)``
+    tuple-shaped ``-start`` op whose ``-done`` consumes the tuple; summing
+    every tuple element double-counts the payload (the operand buffers ride
+    along as aliases).  Strip the leading operand aliases — an exact prefix
+    match against the operand shapes — plus any trailing scalar context
+    slots (the u32[] tokens collective-permute-start carries), so each
+    ``-start``/``-done`` pair contributes wire bytes exactly once.
+    """
+    shapes = list(op.shapes)
+    operand_shapes: list[Shape] = []
+    for name in op.operands:
+        src = comp.ops.get(name)
+        if src is not None:
+            operand_shapes.extend(src.shapes)
+    if (operand_shapes and len(shapes) > len(operand_shapes)
+            and shapes[:len(operand_shapes)] == operand_shapes):
+        shapes = shapes[len(operand_shapes):]
+    while len(shapes) > 1 and not shapes[-1].dims:
+        shapes.pop()
+    return shapes
+
+
 def _walk(comp: HloComputation, module: HloModule, multiplier: int,
           kernels: list[KernelRecord], collectives: list[CollectiveRecord],
           devices_per_pod: int, seen: set[str],
@@ -716,7 +741,11 @@ def _walk(comp: HloComputation, module: HloModule, multiplier: int,
 
         if oc in _COLLECTIVES:
             canonical = oc.removesuffix("-start")
-            payload = op.result_bytes
+            if oc.endswith("-start"):
+                payload = sum(s.bytes
+                              for s in _async_payload_shapes(op, comp))
+            else:
+                payload = op.result_bytes
             if canonical in ("reduce-scatter", "all-to-all"):
                 # wire traffic keyed on the larger (input) side
                 payload = max(payload, sum(
@@ -733,10 +762,18 @@ def _walk(comp: HloComputation, module: HloModule, multiplier: int,
                 payload_bytes=payload, wire_bytes=payload * mult,
                 group_size=gsize, cross_pod=cross))
             # the collective is also a zero-AI kernel occupying HBM traffic
+            # (async starts: operand read + payload write, not the whole
+            # aliased tuple — same exactly-once rule as the wire bytes)
+            if oc.endswith("-start"):
+                mem_bytes = payload + sum(
+                    comp.ops[o].result_bytes for o in op.operands
+                    if o in comp.ops)
+            else:
+                mem_bytes = _op_bytes(op, comp)
             kernels.append(KernelRecord(
                 name=op.name, opcode=canonical, op_name=op.op_name,
                 exec_count=multiplier, flops_by_class={},
-                hbm_bytes=_op_bytes(op, comp), vmem_bytes=_op_bytes(op, comp),
+                hbm_bytes=mem_bytes, vmem_bytes=mem_bytes,
                 category="collective"))
             continue
 

@@ -32,6 +32,22 @@ class MemLevel:
 
 
 @dataclasses.dataclass(frozen=True)
+class NetLevel:
+    """One level of the interconnect hierarchy (ICI within a pod, DCN across).
+
+    The third roofline hierarchy level: collectives bound step time by
+    ``wire_bytes / bytes_per_s + latency_s x n_collectives`` the same way
+    memory traffic is bounded by ``bytes / bandwidth``.  ``bytes_per_s``
+    is the *aggregate* per-chip wire bandwidth (per-link x usable links
+    for ICI), so it divides algorithm-corrected wire bytes directly.
+    """
+
+    name: str                   # "ici" | "dcn"
+    bytes_per_s: float          # aggregate wire bandwidth, bytes/s per chip
+    latency_s: float = 0.0      # per-collective launch/sync latency
+
+
+@dataclasses.dataclass(frozen=True)
 class MachineSpec:
     """Per-chip machine model with multi-precision ceilings (paper Fig 1)."""
 
@@ -45,6 +61,10 @@ class MachineSpec:
     ici_links: int               # usable links per chip (2D torus: 4)
     dcn_bytes_per_s: float       # per-chip cross-pod (data-center network) bw
     empirical: bool = False      # True once ERT measurements overwrite datasheet
+    # interconnect levels, fastest→slowest (ICI before DCN).  Empty means
+    # "derive from the datasheet scalars above" (``interconnect`` property);
+    # ``with_empirical_net`` fills them from measured collective ceilings.
+    net_levels: tuple[NetLevel, ...] = ()
 
     # -- convenience -------------------------------------------------------
     @property
@@ -54,6 +74,24 @@ class MachineSpec:
     @property
     def vmem(self) -> MemLevel:
         return self.mem_levels[0]
+
+    @property
+    def interconnect(self) -> tuple[NetLevel, ...]:
+        """Interconnect roofline levels (third hierarchy level).
+
+        Falls back to datasheet-derived levels (zero launch latency) when
+        no empirical collective characterization has been applied.
+        """
+        if self.net_levels:
+            return self.net_levels
+        return (NetLevel("ici", self.ici_bytes_per_s * self.ici_links),
+                NetLevel("dcn", self.dcn_bytes_per_s))
+
+    def net_level(self, name: str) -> NetLevel:
+        for lv in self.interconnect:
+            if lv.name == name:
+                return lv
+        raise KeyError(f"no interconnect level {name!r} in {self.name}")
 
     def peak_for(self, dtype_class: str) -> float:
         """Ceiling for a dtype class, defaulting to the bf16 MXU ceiling."""
@@ -83,6 +121,22 @@ class MachineSpec:
         )
         return dataclasses.replace(self, peak_flops=flops, mem_levels=levels,
                                    empirical=True)
+
+    def with_empirical_net(self, bandwidths: Mapping[str, float],
+                           latencies: Mapping[str, float] | None = None
+                           ) -> "MachineSpec":
+        """Overwrite interconnect ceilings with measured collective ceilings.
+
+        ``bandwidths``/``latencies`` are keyed by level name ("ici"/"dcn");
+        levels not mentioned keep their current (datasheet or previously
+        measured) values.  Mirrors :meth:`with_empirical` for the network.
+        """
+        lat = latencies or {}
+        levels = tuple(
+            NetLevel(lv.name, bandwidths.get(lv.name, lv.bytes_per_s),
+                     lat.get(lv.name, lv.latency_s))
+            for lv in self.interconnect)
+        return dataclasses.replace(self, net_levels=levels)
 
 
 # --------------------------------------------------------------------------

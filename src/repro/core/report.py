@@ -59,7 +59,7 @@ def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
         x = int((math.log2(ai) - lo) / (hi - lo) * (width - 1))
         y = int((f_hi - math.log2(flops_s)) / (f_hi - f_lo) * (height - 1))
         if 0 <= x < width and 0 <= y < height:
-            if grid[y][x] in (" ", ".", "-", "_"):
+            if grid[y][x] in (" ", ".", "-", "_", "~", "="):
                 grid[y][x] = ch
 
     # ceilings: memory-bw diagonals per level + compute flats per precision
@@ -67,6 +67,12 @@ def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
         for xi in range(width):
             ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
             put(ai, ai * level.bytes_per_s, "." if level.name == "vmem" else "-")
+    # interconnect roofs (third hierarchy level): same diagonal form, AI
+    # read as FLOPs per *wire* byte — collectives bound from these roofs
+    for level in machine.interconnect:
+        for xi in range(width):
+            ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
+            put(ai, ai * level.bytes_per_s, "~" if level.name == "ici" else "=")
     for cls, peak in machine.peak_flops.items():
         for xi in range(width):
             ai = 2 ** (lo + xi * (hi - lo) / (width - 1))
@@ -109,7 +115,7 @@ def ascii_roofline(records: Sequence[KernelRecord], machine: MachineSpec,
     lines.append(f"{'':>10} +{'-'*width}")
     lines.append(f"{'AI=':>10}  {''.join(axis)}")
     legend = (f"{'':>10}  markers: h/H=HBM v/V=VMEM (upper=hot) | "
-              "ceilings: _=compute -=HBM .=VMEM")
+              "ceilings: _=compute -=HBM .=VMEM ~=ICI ==DCN")
     if achieved:
         legend += " | *=achieved"
     lines.append(legend)
@@ -262,8 +268,15 @@ def machine_table(machine: MachineSpec) -> str:
                if lv.capacity_bytes else "uncapped")
         out.append(f"{'memory/' + lv.name:<22}{_fmt_si(lv.bytes_per_s, 'B/s'):>14}"
                    f"  {cap}")
-    out.append(f"{'network/ici':<22}"
-               f"{_fmt_si(machine.ici_bytes_per_s * machine.ici_links, 'B/s'):>14}"
-               f"  {machine.ici_links} link(s)")
-    out.append(f"{'network/dcn':<22}{_fmt_si(machine.dcn_bytes_per_s, 'B/s'):>14}")
+    for lv in machine.interconnect:
+        if machine.net_levels:
+            note = "measured collective ceiling"
+        elif lv.name == "ici":
+            note = f"{machine.ici_links} link(s), datasheet"
+        else:
+            note = "datasheet"
+        if lv.latency_s:
+            note += f", lat {lv.latency_s*1e6:.1f} us"
+        out.append(f"{'network/' + lv.name:<22}"
+                   f"{_fmt_si(lv.bytes_per_s, 'B/s'):>14}  {note}")
     return "\n".join(out)

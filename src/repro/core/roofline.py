@@ -15,7 +15,13 @@ future work (§V): each program's step time is bounded below by::
 with
     T_compute    = sum_c FLOPs_c / peak_c              (c = ceiling class)
     T_memory     = HBM_bytes / HBM_bw
-    T_collective = ICI_wire_bytes / (links x link_bw) + DCN_bytes / DCN_bw
+    T_collective = sum_l (wire_bytes_l / net_bw_l + latency_l x n_colls_l)
+
+where ``l`` ranges over the machine's interconnect levels (ICI within a
+pod, DCN across pods).  Bandwidths/latencies come from
+``MachineSpec.interconnect``: datasheet-derived by default, overwritten
+by ``repro.net`` collective characterization (``with_empirical_net``) —
+the same datasheet→empirical discipline the memory levels follow.
 """
 
 from __future__ import annotations
@@ -129,8 +135,12 @@ def roofline_terms(analysis: ModuleAnalysis, machine: MachineSpec) -> RooflineTe
     memory_s = hbm / machine.hbm.bytes_per_s
     ici_bytes = analysis.collective_wire_bytes(cross_pod=False)
     dcn_bytes = analysis.collective_wire_bytes(cross_pod=True)
-    ici_s = ici_bytes / (machine.ici_bytes_per_s * machine.ici_links)
-    dcn_s = dcn_bytes / machine.dcn_bytes_per_s
+    ici_lv = machine.net_level("ici")
+    dcn_lv = machine.net_level("dcn")
+    n_ici = sum(c.exec_count for c in analysis.collectives if not c.cross_pod)
+    n_dcn = sum(c.exec_count for c in analysis.collectives if c.cross_pod)
+    ici_s = ici_bytes / ici_lv.bytes_per_s + ici_lv.latency_s * n_ici
+    dcn_s = dcn_bytes / dcn_lv.bytes_per_s + dcn_lv.latency_s * n_dcn
     return RooflineTerms(
         compute_s=compute_s, memory_s=memory_s,
         collective_ici_s=ici_s, collective_dcn_s=dcn_s,

@@ -1,0 +1,30 @@
+"""repro.net — the interconnect as a third roofline hierarchy level.
+
+The paper's hierarchy stops at the device edge (VMEM → HBM); this
+subsystem extends it across the wire with the same three-step
+discipline every other level got:
+
+1. **characterize** (``repro.net.characterize``): ERT-style collective
+   microbenchmarks over forced host devices → empirical ICI/DCN
+   bandwidth + latency ceilings, machine-keyed in the tune store;
+2. **attribute** (``repro.core.hlo_analysis`` + ``repro.core.roofline``):
+   compiled collectives' algorithm-corrected wire bytes land on those
+   ceilings as per-phase ``net`` bounds in every trace payload;
+3. **campaign** (``repro.net.report`` + the ``mesh_shapes`` sweep axis):
+   sweep mesh shapes and ask where each config flips from HBM-bound to
+   network-bound.
+
+``python -m repro net {characterize,report}`` is the CLI; see
+docs/DESIGN.md §18.
+"""
+
+from repro.net.characterize import (characterize_net, machine_with_net,
+                                    net_ceilings)
+from repro.net.collectives import (LEGS, OPS, fit_ceiling,
+                                   measure_collectives, payload_bytes,
+                                   wire_bytes)
+
+__all__ = [
+    "LEGS", "OPS", "characterize_net", "fit_ceiling", "machine_with_net",
+    "measure_collectives", "net_ceilings", "payload_bytes", "wire_bytes",
+]

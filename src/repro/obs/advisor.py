@@ -33,6 +33,14 @@ dispatch_stale      record whose ``meta.dispatch_table`` winners were
 level_pinned        one memory level's streaming time accounts for most
                     of the measured wall → the phase is pinned under
                     that bandwidth bound; raise arithmetic intensity
+network_bound       a record's summed collective bound exceeds both its
+                    memory and compute bounds → the point sits under the
+                    interconnect roof (repro.net); compress / overlap
+                    collectives or grow per-device work
+decode_bandwidth_   a ``serve/<config>`` series whose decode-phase
+regress             achieved-HBM-bandwidth fraction *drops* as the batch
+                    (slot count) grows → batching is losing, not
+                    gaining, bandwidth efficiency
 ==================  =====================================================
 
 Findings are ranked by severity (a rule-specific 0–1+ score) and every
@@ -47,13 +55,18 @@ from typing import Any, Iterable
 
 #: rule names in documentation order (docs/DESIGN.md §14 table)
 RULES = ("launch_overhead", "scatter_heavy", "tune_mismatch", "untuned",
-         "level_pinned", "dispatch_stale")
+         "level_pinned", "dispatch_stale", "network_bound",
+         "decode_bandwidth_regress")
 
 #: zero-AI launch share past which launch overhead is called dominant
 ZERO_AI_SHARE = 0.15
 
 #: fraction of measured wall one level's streaming time must account for
 LEVEL_PIN_FRAC = 0.5
+
+#: relative decode-bandwidth-fraction drop (vs the smaller batch) that
+#: counts as a regression rather than noise
+DECODE_BW_DROP = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
@@ -335,6 +348,141 @@ def rule_level_pinned(records: Iterable[Any]) -> list[Finding]:
     return out
 
 
+def rule_network_bound(records: Iterable[Any]) -> list[Finding]:
+    """Points whose collective time bound exceeds both the memory and
+    compute bounds: the interconnect roof (repro.net) is the binding
+    constraint.  Fires on analytical mesh-sweep points too (the bounds
+    are stored whether or not the point executed) and cites the measured
+    ceiling provenance stamped into ``meta.net_ceilings`` when the
+    bounds came from empirical roofs."""
+    # newest per point *including* mesh: each swept shape is its own
+    # scaling regime and gets its own finding
+    newest: dict[tuple, Any] = {}
+    for rec in sorted(records, key=lambda r: r.timestamp):
+        host = rec.host.get("host", "?") if isinstance(rec.host, dict) \
+            else "?"
+        newest[(rec.config, rec.machine, host,
+                tuple(sorted((rec.mesh or {}).items())))] = rec
+    out: list[Finding] = []
+    for rec in newest.values():
+        compute = memory = ici = dcn = 0.0
+        for p in rec.phases.values():
+            compute += float(p.get("compute_s", 0.0))
+            memory += float(p.get("memory_s", 0.0))
+            ici += float(p.get("ici_bound_s", 0.0))
+            dcn += float(p.get("dcn_bound_s", 0.0))
+        net = ici + dcn
+        if net <= 0 or net <= max(compute, memory):
+            continue
+        mesh = "x".join(str(v) for _, v in sorted((rec.mesh or {}).items())) \
+            or "1x1"
+        evidence = [
+            f"run {rec.run_id}: collective bound {net * 1e3:.3f}ms "
+            f"(ici {ici * 1e3:.3f}ms + dcn {dcn * 1e3:.3f}ms) exceeds "
+            f"memory {memory * 1e3:.3f}ms and compute "
+            f"{compute * 1e3:.3f}ms at mesh {mesh}",
+        ]
+        nc = rec.meta.get("net_ceilings")
+        if isinstance(nc, dict) and nc:
+            for leg in sorted(nc):
+                c = nc[leg] if isinstance(nc[leg], dict) else {}
+                evidence.append(
+                    f"{leg} ceiling {float(c.get('bytes_per_s', 0)) / 1e9:.3f}"
+                    f" GB/s measured over {c.get('n_devices', '?')} "
+                    f"device(s) (git {str(c.get('git_sha', '?'))[:10]}, "
+                    f"tune-store key {c.get('key', '?')})")
+        else:
+            evidence.append(
+                "bounds use datasheet interconnect ceilings — run "
+                "`python -m repro net characterize` for measured roofs")
+        out.append(Finding(
+            rule="network_bound",
+            severity=net / (net + max(compute, memory)),
+            subject=f"{rec.config}@{mesh}",
+            evidence=evidence,
+            remediation="the point sits under the interconnect roof: cut "
+                        "wire bytes (int8 gradient all-reduce — "
+                        "repro.distributed.compression moves the DCN leg "
+                        "to 1/4 of fp32), grow per-device work (bigger "
+                        "per-device batch, smaller model axis), or stop "
+                        "scaling this config past the flip point "
+                        "(`python -m repro net report`)"))
+    return out
+
+
+def rule_decode_bandwidth_regress(records: Iterable[Any]) -> list[Finding]:
+    """``serve/<config>`` series whose decode-phase achieved-HBM-bandwidth
+    fraction *drops* as the batch (slot count) grows.
+
+    Decode is bandwidth-bound; adding slots amortizes weight streaming,
+    so the achieved fraction should rise (or hold) with batch.  A drop
+    past :data:`DECODE_BW_DROP` means batching is losing efficiency —
+    usually a scheduler regression or a KV-cache layout gone cold.
+    Newest record per (config, machine, host, slots), compared along the
+    slot axis.
+    """
+    from repro.core.machine import MACHINES, get_machine
+
+    # newest measured decode payload per (serve key, n_slots)
+    by_series: dict[tuple, dict[int, Any]] = {}
+    for rec in sorted(records, key=lambda r: r.timestamp):
+        if not str(rec.config).startswith("serve/"):
+            continue
+        p = rec.phases.get("decode")
+        if not isinstance(p, dict) or float(p.get("wall_s", 0.0)) <= 0:
+            continue
+        slots = rec.meta.get("n_slots")
+        if not isinstance(slots, int) or slots <= 0:
+            continue
+        host = rec.host.get("host", "?") if isinstance(rec.host, dict) \
+            else "?"
+        key = (rec.config, rec.machine, host,
+               str(rec.meta.get("fusion", "off")))
+        by_series.setdefault(key, {})[slots] = rec
+
+    out: list[Finding] = []
+    for key, by_slots in by_series.items():
+        if len(by_slots) < 2:
+            continue
+        machine = get_machine(key[1]) if key[1] in MACHINES \
+            else get_machine("cpu-host")
+        fracs: list[tuple[int, float, Any]] = []
+        for slots, rec in sorted(by_slots.items()):
+            p = rec.phases["decode"]
+            wall = float(p.get("wall_s", 0.0))
+            frac = (float(p.get("hbm_bytes", 0.0)) / wall
+                    / machine.hbm.bytes_per_s)
+            fracs.append((slots, frac, rec))
+        worst: tuple[float, Any, Any] | None = None
+        for (s0, f0, r0), (s1, f1, r1) in zip(fracs, fracs[1:]):
+            if f0 <= 0:
+                continue
+            drop = 1.0 - f1 / f0
+            if drop > DECODE_BW_DROP and (worst is None
+                                          or drop > worst[0]):
+                worst = (drop, (s0, f0, r0), (s1, f1, r1))
+        if worst is None:
+            continue
+        drop, (s0, f0, r0), (s1, f1, r1) = worst
+        out.append(Finding(
+            rule="decode_bandwidth_regress",
+            severity=min(1.0, drop * 2),
+            subject=f"{key[0]}/decode",
+            evidence=[
+                f"run {r1.run_id}: decode achieved-HBM-bandwidth fraction "
+                f"{f1:.1%} at {s1} slot(s) vs {f0:.1%} at {s0} slot(s) "
+                f"(run {r0.run_id}) — a {drop:.0%} drop where batching "
+                "should amortize weight streaming",
+            ],
+            remediation="decode efficiency fell as batch grew: check the "
+                        "continuous-batching scheduler (slot "
+                        "fragmentation, prefill starving decode ticks) "
+                        "and the KV-cache page layout; re-record with "
+                        "`python -m repro serve --slots N` at both batch "
+                        "sizes to bisect"))
+    return out
+
+
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
@@ -354,7 +502,11 @@ def advise(workspace: Any, config: str | None = None,
                 + rule_tune_mismatch(stamped, tune_store, machine=machine)
                 + rule_untuned(stamped, tune_store, machine=machine)
                 + rule_level_pinned(newest)
-                + rule_dispatch_stale(stamped))
+                + rule_dispatch_stale(stamped)
+                # sweep points too: analytical mesh sweeps carry the
+                # collective bounds that flag a network-bound regime
+                + rule_network_bound(trace_recs + sweep_recs)
+                + rule_decode_bandwidth_regress(trace_recs))
     findings.sort(key=lambda f: (-f.severity, f.rule, f.subject))
     return findings
 

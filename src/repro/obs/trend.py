@@ -223,28 +223,58 @@ class Regression:
     series: TrendSeries
     baseline: float
     rel: float                    # newest/baseline - 1 (positive = slower)
+    baseline_ref: str = ""        # pinned anchor (empty = rolling median)
 
     def describe(self) -> str:
         s = self.series
-        return (f"{s.key} [{s.metric}]: {s.newest.value:.6g} vs baseline "
+        anchor = (f"pinned {self.baseline_ref}" if self.baseline_ref
+                  else "baseline")
+        return (f"{s.key} [{s.metric}]: {s.newest.value:.6g} vs {anchor} "
                 f"{self.baseline:.6g} (+{100 * self.rel:.1f}%, "
                 f"{s.newest.ref})")
 
 
+def pinned_baseline(series: TrendSeries, run_id: str) -> TrendPoint | None:
+    """The series point written by ``run_id`` (prefix match, same rule
+    as ``TraceStore.run``) — ``None`` when this series never saw it."""
+    want = f"run {run_id}"
+    for p in series.points:
+        if p.ref == want or p.ref.startswith(want):
+            return p
+    return None
+
+
 def gate_series(series: Iterable[TrendSeries],
-                tolerance: float = DEFAULT_TOLERANCE) -> list[Regression]:
+                tolerance: float = DEFAULT_TOLERANCE,
+                baseline_run: str | None = None) -> list[Regression]:
     """Lower-is-better series whose newest point regressed past the
-    tolerance vs the median of its recent history."""
+    tolerance vs its baseline.
+
+    The default baseline is the median of the recent history (rolling,
+    :data:`BASELINE_WINDOW`).  ``baseline_run`` pins it instead to the
+    value a tagged known-good run wrote (``repro trend tag`` +
+    ``--baseline``): drift can no longer creep in through a slowly
+    degrading median, and series that never saw the pinned run (bench
+    harvests, configs added later) are skipped rather than mis-gated.
+    """
     flags: list[Regression] = []
     for s in series:
         if not s.lower_is_better or len(s.points) < 2:
             continue
-        base = s.baseline()
+        ref = ""
+        if baseline_run is not None:
+            pin = pinned_baseline(s, baseline_run)
+            if pin is None or pin is s.newest:
+                continue
+            base, ref = pin.value, pin.ref
+        else:
+            base = s.baseline()
         if base is None or base <= 0:
             continue
         rel = s.newest.value / base - 1.0
         if rel > tolerance:
-            flags.append(Regression(series=s, baseline=base, rel=rel))
+            flags.append(Regression(series=s, baseline=base, rel=rel,
+                                    baseline_ref=ref))
     flags.sort(key=lambda r: -r.rel)
     return flags
 

@@ -25,7 +25,7 @@ if TYPE_CHECKING:                                    # pragma: no cover
 #: RooflineResult.kind values, in paper-workflow order; the trailing
 #: three are the observability layer (repro.obs) over the stores.
 KINDS = ("characterize", "profile", "record", "report", "sweep", "tune",
-         "compare", "trend", "advise", "merge")
+         "compare", "trend", "advise", "merge", "net")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +61,11 @@ def payload_from_profile(res: Any) -> dict[str, Any]:
         "flops": res.analysis.total_flops,
         "hbm_bytes": res.analysis.total_hbm_bytes,
         "vmem_bytes": res.analysis.total_vmem_bytes,
+        "ici_bytes": t.ici_wire_bytes,
+        "dcn_bytes": t.dcn_wire_bytes,
+        "net_bytes": t.ici_wire_bytes + t.dcn_wire_bytes,
+        "ici_bound_s": t.collective_ici_s,
+        "dcn_bound_s": t.collective_dcn_s,
         "kernels": [],
     }
 
@@ -100,8 +105,9 @@ class RooflineResult:
                    for p in self.phases.values())
 
     def levels(self, phase: str) -> list[LevelStat]:
-        """Per-memory-level achieved/bound for one phase (hierarchical
-        roofline, collapsed to the level axis)."""
+        """Per-level achieved/bound for one phase (hierarchical roofline,
+        collapsed to the level axis): memory levels (vmem/hbm), then
+        interconnect levels (ici/dcn), then the aggregate ``net`` level."""
         p = self.phases[phase]
         wall = float(p.get("wall_s", 0.0))
         out = []
@@ -114,6 +120,24 @@ class RooflineResult:
                 achieved_bytes_per_s=achieved,
                 frac_of_peak=achieved / lv.bytes_per_s
                 if lv.bytes_per_s else 0.0))
+        # interconnect: bound_s from the stored payload when present (it
+        # includes per-collective launch latency), else bytes / bandwidth
+        net_bytes = net_bound = 0.0
+        for lv in self.machine.interconnect:
+            nbytes = float(p.get(f"{lv.name}_bytes", 0.0))
+            bound = float(p.get(
+                f"{lv.name}_bound_s",
+                nbytes / lv.bytes_per_s if lv.bytes_per_s else 0.0))
+            net_bytes += nbytes
+            net_bound += bound
+            out.append(LevelStat(
+                level=lv.name, bytes=nbytes, bound_s=bound,
+                achieved_bytes_per_s=nbytes / wall if wall else 0.0,
+                frac_of_peak=bound / wall if wall else 0.0))
+        out.append(LevelStat(
+            level="net", bytes=net_bytes, bound_s=net_bound,
+            achieved_bytes_per_s=net_bytes / wall if wall else 0.0,
+            frac_of_peak=net_bound / wall if wall else 0.0))
         return out
 
     def summary(self) -> str:

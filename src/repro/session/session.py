@@ -165,7 +165,13 @@ class Session:
         phase_args, run = self._build_phases(
             config, seq=seq, batch=batch, amp=amp, fusion=fusion,
             smoke=smoke, concrete=True)
-        ms = collect_phases(phase_args, machine=self.machine, iters=iters,
+        # bounds against the net-augmented machine: measured interconnect
+        # ceilings (when `net characterize` stored them for this machine
+        # key) replace the datasheet roofs in every collective bound
+        from repro.net.characterize import machine_with_net, net_ceilings
+        machine = machine_with_net(self.machine, self.workspace.tune_store)
+        nc = net_ceilings(self.machine.name, self.workspace.tune_store)
+        ms = collect_phases(phase_args, machine=machine, iters=iters,
                             warmup=warmup, matmul_class=_matmul_class(run))
         if scale_wall != 1.0:
             from repro.trace.cli import scale_measurement
@@ -183,12 +189,13 @@ class Session:
             meta={"smoke": smoke, "seq": seq, "batch": batch, "amp": amp,
                   "fusion": fusion, "scale_wall": scale_wall,
                   "kernel_configs": kcfg, "dispatch_table": dtab,
+                  **({"net_ceilings": nc} if nc else {}),
                   **dict(meta or {})})
         self.workspace.trace_store.append(rec)
         self.workspace.write_header(self.machine.name)
         from repro.trace.timeline import ascii_timeline, build_timeline
         return RooflineResult(
-            kind="record", name=config, machine=self.machine,
+            kind="record", name=config, machine=machine,
             provenance=self._provenance(run_id=rec.run_id,
                                         store=self.workspace.trace_path),
             phases=phases_from_record(rec),
@@ -311,7 +318,7 @@ class Session:
         from repro.sweep.aggregate import (latest_per_point, render_summary,
                                            sweep_records)
         from repro.sweep.engine import run_sweep
-        from repro.sweep.spec import SweepSpec, smoke_spec
+        from repro.sweep.spec import SweepSpec, normalize_axes, smoke_spec
 
         if spec is None:
             if smoke:
@@ -322,7 +329,9 @@ class Session:
                 spec = dataclasses.replace(smoke_spec(),
                                            machine=self.machine.name)
             else:
-                spec = SweepSpec(machine=self.machine.name, **axes)
+                # mesh_shapes is the mesh-scale alias for meshes (repro.net)
+                spec = SweepSpec(machine=self.machine.name,
+                                 **normalize_axes(dict(axes)))
         elif axes:
             raise TypeError(f"pass axes ({sorted(axes)}) or a spec, "
                             "not both")
@@ -435,26 +444,63 @@ class Session:
     # -- 8. observability: trend / advise / merge (repro.obs) ------------
     def trend(self, config: str | None = None, *, gate: bool = False,
               tolerance: float | None = None,
+              baseline: str | None = None,
               bench_dirs: Sequence[str] | None = None,
               max_rows: int = 40) -> RooflineResult:
         """Perf-trend series over the workspace's stored history (trace
         + sweep records + harvested ``BENCH_*.json``), sparkline report;
         ``gate=True`` sets ``exit_code`` 1 when any lower-is-better
-        series regressed past the tolerance."""
+        series regressed past the tolerance.  ``baseline`` pins the gate
+        to a tagged known-good run (tag name or run id — see
+        :meth:`trend_tag`) instead of the rolling median."""
         from repro.obs.trend import (DEFAULT_TOLERANCE, collect_series,
                                      gate_series, render_trend)
         series = collect_series(self.workspace, config,
                                 bench_dirs=bench_dirs)
+        baseline_run = (self.workspace.resolve_tag(baseline)
+                        if baseline else None)
         regressions = gate_series(
             series, tolerance if tolerance is not None
-            else DEFAULT_TOLERANCE) if gate else None
+            else DEFAULT_TOLERANCE,
+            baseline_run=baseline_run) if gate else None
         return RooflineResult(
             kind="trend", name=config or "all", machine=self.machine,
             provenance=self._provenance(n_series=len(series),
-                                        gated=gate),
+                                        gated=gate,
+                                        baseline=baseline_run),
             text=render_trend(series, regressions, max_rows=max_rows),
             data=(series, regressions or []),
             exit_code=1 if regressions else 0)
+
+    def trend_tag(self, name: str, run_id: str | None = None
+                  ) -> RooflineResult:
+        """Pin a run id under a human tag in the workspace header so
+        ``trend(gate=True, baseline=name)`` anchors to it.  ``run_id``
+        defaults to the newest stored trace record; prefixes are
+        resolved against the trace then sweep stores."""
+        rec = None
+        if run_id is None:
+            recs = self.workspace.trace_store.last(n=1)
+            if not recs:
+                raise LookupError(
+                    f"no records in {self.workspace.trace_path} to tag — "
+                    "run `python -m repro record` first")
+            rec = recs[0]
+        else:
+            rec = (self.workspace.trace_store.run(run_id)
+                   or self.workspace.sweep_store.run(run_id))
+            if rec is None:
+                raise LookupError(
+                    f"run {run_id!r} not found in the workspace trace or "
+                    "sweep stores")
+        self.workspace.tag_run(name, rec.run_id)
+        return RooflineResult(
+            kind="trend", name=f"tag/{name}", machine=self.machine,
+            provenance=self._provenance(run_id=rec.run_id),
+            text=f"tagged run {rec.run_id} ({rec.config}) as {name!r} — "
+                 f"gate against it with `python -m repro trend --gate "
+                 f"--baseline {name}`",
+            data={"tag": name, "run_id": rec.run_id})
 
     def advise(self, config: str | None = None, *, top: int = 0
                ) -> RooflineResult:
@@ -482,6 +528,60 @@ class Session:
             text=render_merge(reports, self.workspace.root,
                               remote_root),
             data=reports)
+
+    # -- 9. interconnect roofline level (repro.net) -----------------------
+    def net_characterize(self, *, n_devices: int = 8,
+                         sizes: Sequence[int] | None = None,
+                         iters: int = 3, warmup: int = 1,
+                         force: bool = False, smoke: bool = False,
+                         deadline_s: float = 900.0,
+                         inline: bool = False) -> RooflineResult:
+        """Measure (or fetch) this host's collective ceilings into the
+        workspace tune store and fold them into the session's machine —
+        every later bound runs against the measured ICI/DCN roofs.  A
+        second call under the same machine key is a pure store hit."""
+        from repro.net.characterize import characterize_net, machine_with_net
+        out = characterize_net(
+            self.machine.name, n_devices=n_devices,
+            sizes=tuple(sizes) if sizes else None, iters=iters,
+            warmup=warmup, store=self.workspace.tune_store, force=force,
+            smoke=smoke, deadline_s=deadline_s, inline=inline)
+        self.machine = machine_with_net(self.machine,
+                                        self.workspace.tune_store)
+        self.workspace.write_header(self.machine.name)
+        from repro.core.report import machine_table
+        tag = ("store hit — nothing re-timed" if out["cached"] else
+               f"measured over {out['n_devices']} forced host device(s)")
+        return RooflineResult(
+            kind="net", name=f"net/{self.machine.name}",
+            machine=self.machine,
+            provenance=self._provenance(store=self.workspace.tune_path,
+                                        cached=out["cached"],
+                                        n_devices=out["n_devices"]),
+            text=f"net characterize: {tag}\n\n"
+                 + machine_table(self.machine),
+            data=out)
+
+    def net_report(self, sweep: str | None = None,
+                   config: str | None = None) -> RooflineResult:
+        """Stored interconnect ceilings + the mesh-scale ranking over
+        persisted sweep records: which points are network-bound, and
+        the mesh shape where each config flips (store-only)."""
+        from repro.net.report import net_rows, render_net_report
+        from repro.sweep.aggregate import latest_per_point, sweep_records
+        recs = latest_per_point(
+            sweep_records(self.workspace.sweep_store, sweep))
+        recs = {k: r for k, r in recs.items()
+                if config is None or r.config == config}
+        rows = net_rows(recs)
+        return RooflineResult(
+            kind="net", name=sweep or "all", machine=self.machine,
+            provenance=self._provenance(store=self.workspace.sweep_path,
+                                        n_points=len(rows)),
+            text=render_net_report(recs, machine=self.machine.name,
+                                   store=self.workspace.tune_store),
+            data=rows,
+            exit_code=0 if rows else 1)
 
     # -- shared phase construction (the one registry path) ---------------
     def _build_phases(self, config: str, *, seq: int, batch: int, amp: str,

@@ -233,10 +233,13 @@ class Workspace:
             "stores": {k: os.path.basename(v)
                        for k, v in self.store_paths().items()},
         }
-        # merge provenance (repro.obs.merge) survives header refreshes the
-        # same way `created` does
+        # merge provenance (repro.obs.merge) and run tags (repro.obs.trend
+        # pinned baselines) survive header refreshes the same way
+        # `created` does
         if prev.get("merges"):
             header["merges"] = prev["merges"]
+        if prev.get("tags"):
+            header["tags"] = prev["tags"]
         self._write_header_doc(header)
         return header
 
@@ -259,6 +262,34 @@ class Workspace:
         header["updated"] = time.time()
         self._write_header_doc(header)
         return header
+
+    def tag_run(self, name: str, run_id: str) -> dict[str, Any]:
+        """Pin a run id under a human name in the header's ``tags`` map
+        (``repro trend tag v1.2-good``): the regression gate can then be
+        anchored to a known-good run instead of the rolling median."""
+        self.ensure()
+        header = self.read_header()
+        if not header:
+            header = {"schema_version": HEADER_SCHEMA_VERSION,
+                      "created": time.time()}
+        header.setdefault("tags", {})[str(name)] = {
+            "run_id": str(run_id), "created": time.time()}
+        header["updated"] = time.time()
+        self._write_header_doc(header)
+        return header
+
+    def tags(self) -> dict[str, dict[str, Any]]:
+        """The header's run-tag map (``{} `` when none were set)."""
+        tags = self.read_header().get("tags")
+        return dict(tags) if isinstance(tags, dict) else {}
+
+    def resolve_tag(self, name_or_run: str) -> str:
+        """A tag name → its pinned run id; anything else passes through
+        verbatim (so ``--baseline`` accepts either spelling)."""
+        entry = self.tags().get(str(name_or_run))
+        if isinstance(entry, dict) and entry.get("run_id"):
+            return str(entry["run_id"])
+        return str(name_or_run)
 
     def read_header(self) -> dict[str, Any]:
         """The stored header, or ``{}`` (corruption is never fatal —

@@ -270,10 +270,14 @@ def gallery(records: Mapping[str, TraceRecord] | Sequence[TraceRecord],
     """One hierarchical roofline per point, measured achieved overlaid."""
     recs = list(records.values() if isinstance(records, Mapping)
                 else records)
+    # gallery roofs use the measured interconnect ceilings when the tune
+    # store has them — the same resolution rule the sweep engine applies
+    from repro.net.characterize import machine_with_net
+
     charts = []
     for rec in recs[:max_charts]:
-        machine = get_machine(rec.machine) if rec.machine in MACHINES \
-            else get_machine("cpu-host")
+        name = rec.machine if rec.machine in MACHINES else "cpu-host"
+        machine = machine_with_net(name)
         charts.append(ascii_roofline(
             kernels_from_record(rec), machine, title=_label(rec),
             achieved=achieved_from_record(rec) or None))

@@ -168,6 +168,15 @@ def _matmul_class(run) -> str | None:
     return "bf16" if run.compute_dtype == jnp.bfloat16 else None
 
 
+def _resolve_machine(name: str):
+    """The machine model every bound in this point is computed against:
+    the registry spec with stored empirical interconnect ceilings folded
+    in when ``repro.net characterize`` has run for this machine key
+    (docs/DESIGN.md §18) — datasheet interconnect otherwise."""
+    from repro.net.characterize import machine_with_net
+    return machine_with_net(name)
+
+
 def _analytical_payload(res, machine) -> dict[str, Any]:
     """Phase payload for a bound-only point: a zero-wall measurement, so
     the schema (and serializer) is exactly ``trace.store.phase_payload``
@@ -195,6 +204,11 @@ def _cache_path(cache_dir: str, point: SweepPoint) -> str:
     # bounds
     cfg = get_smoke(point.config) if point.smoke else get_config(point.config)
     machine = MACHINES.get(point.machine)
+    if machine is not None:
+        # hash the *resolved* model (empirical net ceilings folded in):
+        # a fresh `repro net characterize` moves the collective bounds,
+        # so it must invalidate analytical payloads too
+        machine = _resolve_machine(point.machine)
     env = json.dumps({
         "config": dataclasses.asdict(cfg),
         "machine": dataclasses.asdict(machine) if machine else point.machine,
@@ -244,6 +258,12 @@ def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
     mesh_dict = {"data": point.mesh[0], "model": point.mesh[1]}
     meta = {"sweep_point": point.key, "sweep": sweep_name or "adhoc",
             "label": point.label, **point.to_dict()}
+    # interconnect-ceiling provenance: which measured roofs (if any) the
+    # collective bounds in this record were computed against
+    from repro.net.characterize import net_ceilings
+    nc = net_ceilings(point.machine)
+    if nc:
+        meta["net_ceilings"] = nc
     if point.measured:
         # which kernel configs this measurement will run with (tuned
         # winners vs hardcoded defaults) — the report side flags points
@@ -259,10 +279,9 @@ def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
                 point.config, cached, machine=point.machine, mesh=mesh_dict,
                 meta={**meta, "cached": True}), True
 
-        from repro.core.machine import get_machine
         from repro.core.profiler import profile_fn
         model, run, phases, shardings, mesh = _build_point(point)
-        machine = get_machine(point.machine)
+        machine = _resolve_machine(point.machine)
         payloads = {}
         for name, (fn, args) in phases.items():
             res = profile_fn(
@@ -287,7 +306,8 @@ def run_point(point: SweepPoint, *, iters: int = 3, warmup: int = 1,
         if mesh is not None:
             concrete = jax.device_put(args, in_sh)
         ms[name] = collect_phase(
-            name, fn, args, machine=point.machine, iters=iters,
+            name, fn, args, machine=_resolve_machine(point.machine),
+            iters=iters,
             warmup=warmup, concrete_args=concrete, mesh=mesh,
             in_shardings=in_sh, matmul_class=_matmul_class(run))
     return record_from_phases(

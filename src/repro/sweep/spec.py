@@ -147,12 +147,12 @@ class SweepSpec:
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "SweepSpec":
+        kw = normalize_axes(dict(d))
         fields = {f.name for f in dataclasses.fields(cls)}
-        unknown = set(d) - fields
+        unknown = set(kw) - fields
         if unknown:
             raise ValueError(f"unknown sweep-spec keys {sorted(unknown)}; "
                              f"known: {sorted(fields)}")
-        kw = dict(d)
         for tup in ("configs", "seqs", "batches", "amps", "fusions"):
             if tup in kw:
                 kw[tup] = tuple(kw[tup])
@@ -163,6 +163,25 @@ class SweepSpec:
     @classmethod
     def from_json(cls, text: str) -> "SweepSpec":
         return cls.from_dict(json.loads(text))
+
+
+def normalize_axes(axes: dict[str, Any]) -> dict[str, Any]:
+    """Resolve axis aliases in a spec dict (in place, also returned).
+
+    ``mesh_shapes`` is the mesh-scale campaign spelling of ``meshes``
+    (the repro.net tentpole: "at what mesh shape does this config go
+    network-bound?"); each entry may be a ``(data, model)`` pair or a
+    ``"DxM"`` string.  Passing both spellings is an error — silently
+    preferring one would drop half the campaign.
+    """
+    if "mesh_shapes" in axes:
+        if "meshes" in axes:
+            raise ValueError("pass either meshes or mesh_shapes, not both")
+        shapes = axes.pop("mesh_shapes")
+        axes["meshes"] = tuple(
+            parse_mesh(m) if isinstance(m, str) else tuple(m)
+            for m in shapes)
+    return axes
 
 
 def parse_mesh(s: str) -> tuple[int, int]:

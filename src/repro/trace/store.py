@@ -133,6 +133,13 @@ def phase_payload(m: PhaseMeasurement, top_kernels: int = 8
         "flops": m.flops,
         "hbm_bytes": m.hbm_bytes,
         "vmem_bytes": m.vmem_bytes,
+        # interconnect level (third roofline hierarchy level): algorithm-
+        # corrected wire bytes split by pod locality + their time bounds
+        "ici_bytes": t.ici_wire_bytes,
+        "dcn_bytes": t.dcn_wire_bytes,
+        "net_bytes": t.ici_wire_bytes + t.dcn_wire_bytes,
+        "ici_bound_s": t.collective_ici_s,
+        "dcn_bound_s": t.collective_dcn_s,
         "kernels": [
             {"name": k.name, "category": k.category,
              "exec_count": k.exec_count,

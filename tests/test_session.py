@@ -299,7 +299,7 @@ class TestUnifiedCli:
     def test_every_subcommand_answers_help(self, capsys):
         from repro.cli import SUBCOMMANDS, main
         for sub in SUBCOMMANDS:
-            if sub in ("sweep", "tune"):
+            if sub in ("sweep", "tune", "net"):
                 assert main([sub, "--help"]) == 0
             else:
                 with pytest.raises(SystemExit) as ei:
